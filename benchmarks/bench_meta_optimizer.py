@@ -1,0 +1,71 @@
+"""Paper Appendix B / Fig 5 — Bayesian meta-optimizer convergence.
+
+Each trial: one simulator episode under the suggested Theta; reward =
+Eq. 5 terms + throughput bonus.  Expected: best reward stabilizes within
+5-8 trials (paper) and beats random search at equal trial budget."""
+
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core import (BayesianMetaOptimizer, EWSJFConfig, EWSJFScheduler,
+                        MetaParams, RewardWeights, ServingSimulator,
+                        WorkloadSpec, reward, reward_terms)
+from repro.core.partition import PartitionConfig, refine_and_prune
+
+from .common import SCALE, cost_model, engine_params
+
+
+def episode_reward(theta: MetaParams, base, seed: int = 0) -> float:
+    cfg = EWSJFConfig(max_queues=theta.max_queues, min_history=64,
+                      reopt_interval=20.0, enable_meta_opt=False)
+    sched = EWSJFScheduler(cfg, cost_model())
+    sched.manager.meta = theta
+    sched._trial_meta = theta
+    sim = ServingSimulator(sched, cost_model(), engine_params())
+    r = sim.run(copy.deepcopy(base))
+    ts = r.ttft_stats()
+    # Eq. 5-style: throughput bonus minus UX penalty minus queue spread
+    return (r.tok_per_s / 100.0 - 2.0 * ts["short"]["mean"] / 10.0
+            - 0.05 * len(sched.manager.queues))
+
+
+def run(n_trials: int = 10, seed: int = 0):
+    n = max(300, int(5_000 * SCALE))
+    base = WorkloadSpec(n_requests=n, arrival_rate=50.0, seed=seed).generate()
+    opt = BayesianMetaOptimizer(seed=seed, n_init=3)
+    best_curve = []
+    for t in range(n_trials):
+        theta = opt.suggest()
+        r = episode_reward(theta, base, seed)
+        opt.observe(theta, r)
+        best_curve.append(round(opt.best_reward, 3))
+    rng = np.random.default_rng(seed)
+    rand_best = -np.inf
+    rand_curve = []
+    for t in range(n_trials):
+        u = rng.random(7)
+        theta = MetaParams.from_vector(
+            opt.bounds[:, 0] + u * (opt.bounds[:, 1] - opt.bounds[:, 0]))
+        rand_best = max(rand_best, episode_reward(theta, base, seed))
+        rand_curve.append(round(rand_best, 3))
+    conv_at = next((i + 1 for i in range(2, n_trials)
+                    if best_curve[i] - best_curve[max(i - 3, 0)] < 1e-3),
+                   n_trials)
+    return best_curve, rand_curve, conv_at
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    bo, rand, conv = run()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"meta_optimizer,{us:.0f},"
+          f"bo_curve={bo}|random_curve={rand}|converged_at_trial={conv}|"
+          f"paper_claim=5-8_trials")
+
+
+if __name__ == "__main__":
+    main()

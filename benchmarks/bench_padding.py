@@ -1,0 +1,44 @@
+"""Beyond-paper (TPU adaptation, DESIGN.md SS3): bucket-padding waste.
+
+On TPU, prefill batches compile per shape bucket; every request in a batch
+pays the bucket edge.  EWSJF's performance-homogeneous queues map to
+buckets, cutting padding waste vs FCFS admission order."""
+
+from __future__ import annotations
+
+import copy
+import time
+
+from repro.core import ServingSimulator, WorkloadSpec
+
+from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+
+
+def run(seed: int = 0):
+    n = max(600, int(30_000 * SCALE))
+    base = WorkloadSpec(n_requests=n, arrival_rate=40.0, seed=seed).generate()
+    rows = []
+    for method, sched in [("fcfs", make_fcfs()), ("ewsjf", make_ewsjf())]:
+        sim = ServingSimulator(sched, cost_model(),
+                               engine_params(bucket_pad=True))
+        r = sim.run(copy.deepcopy(base))
+        rows.append({"method": method,
+                     "padding_waste_pct": round(100 * r.padding_waste, 1),
+                     "tok_s": round(r.tok_per_s, 1)})
+    return rows
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    base = next(r for r in rows if r["method"] == "fcfs")
+    for r in rows:
+        sp = (r["tok_s"] / max(base["tok_s"], 1e-9) - 1) * 100
+        print(f"padding,{us:.0f},method={r['method']}|"
+              f"waste={r['padding_waste_pct']}%|tok_s={r['tok_s']}|"
+              f"speedup={sp:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

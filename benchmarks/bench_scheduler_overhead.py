@@ -1,0 +1,54 @@
+"""Paper SS5 / Table 11 — tactical-loop O(k) overhead + strategic O(N log N).
+
+Times EWSJF.tick() against queue count k (must stay ~linear, micro-seconds)
+and Refine-and-Prune against history size N."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BatchBudget, EWSJFConfig, EWSJFScheduler, Request,
+                        refine_and_prune)
+from repro.core.partition import PartitionConfig
+
+from .common import cost_model
+
+
+def time_tick(k: int, n_reqs: int = 512, iters: int = 200) -> float:
+    sched = EWSJFScheduler(EWSJFConfig(max_queues=k, min_history=32),
+                           cost_model())
+    rng = np.random.default_rng(0)
+    lens = rng.integers(32, 4096, size=2048)
+    sched._repartition(lens.astype(float))
+    for ln in rng.integers(32, 4096, size=n_reqs):
+        sched.submit(Request(prompt_len=int(ln)), now=0.0)
+    budget = BatchBudget(max_requests=0)     # score-only ticks (no dequeue)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        sched.tick(float(i), budget)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def time_partition(n: int, iters: int = 5) -> float:
+    rng = np.random.default_rng(0)
+    lens = np.concatenate([rng.integers(32, 256, int(n * 0.8)),
+                           rng.integers(1024, 4096, n - int(n * 0.8))])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        refine_and_prune(lens, PartitionConfig(max_queues=32))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    for k in (4, 8, 16, 32, 64):
+        us = time_tick(k)
+        print(f"tick_overhead,{us:.1f},k={k}|us_per_tick={us:.1f}")
+    for n in (1_000, 10_000, 100_000):
+        us = time_partition(n)
+        print(f"refine_and_prune,{us:.0f},N={n}|us_per_run={us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

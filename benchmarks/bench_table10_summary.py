@@ -1,0 +1,54 @@
+"""Paper Table 10 — best-configuration summary: req/s, tok/s, completion
+time, utilization, tail latency for FCFS vs EWSJF on both regimes."""
+
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core import ServingSimulator, uniform_workload
+
+from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+
+
+def run(seed: int = 0):
+    rows = []
+    for regime, (lo, hi, n0, rate) in {
+        "short": (32, 512, 30_000, 60.0),
+        "long": (1024, 4096, 10_000, 5.0),
+    }.items():
+        n = max(2500 if regime == "short" else 1000, int(n0 * SCALE))
+        base = uniform_workload(n, lo, hi, rate, seed=seed)
+        for method, sched in [("fcfs", make_fcfs()),
+                              ("ewsjf", make_ewsjf(max_queues=30))]:
+            sim = ServingSimulator(sched, cost_model(), engine_params())
+            r = sim.run(copy.deepcopy(base))
+            lat = np.asarray([q.e2e_latency for q in r.finished
+                              if q.e2e_latency is not None])
+            rows.append({
+                "regime": regime, "method": method,
+                "req_s": round(r.req_per_s, 2),
+                "tok_s": round(r.tok_per_s, 1),
+                "time_s": round(r.total_time, 1),
+                "util_pct": round(r.utilization * 100, 1),
+                "p95_latency_s": round(float(np.percentile(lat, 95)), 2)
+                if len(lat) else 0.0,
+            })
+    return rows
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        print(f"table10,{us:.0f},"
+              f"regime={r['regime']}|method={r['method']}|req_s={r['req_s']}|"
+              f"tok_s={r['tok_s']}|time_s={r['time_s']}|util={r['util_pct']}%|"
+              f"p95={r['p95_latency_s']}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 3 — impact of queue count on serving performance.
+
+FCFS vs EWSJF with fixed k-means partitioning (k = 5/10/30) vs the full
+Refine-and-Prune pipeline.  Expected structure: throughput rises with queue
+count and Refine-and-Prune (auto k≈32) tops the fixed-k variants."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ServingSimulator, WorkloadSpec, run_comparison
+
+from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+
+
+def run(n_requests: int | None = None, rate: float = 40.0, seed: int = 0):
+    n = n_requests or max(500, int(30_000 * SCALE))
+    wl = WorkloadSpec(n_requests=n, arrival_rate=rate, seed=seed)
+    scheds = {"fcfs_1q": make_fcfs()}
+    for k in (5, 10, 30):
+        scheds[f"ewsjf_kmeans_{k}q"] = make_ewsjf(max_queues=k, kmeans_k=k)
+    scheds["ewsjf_refined_32q"] = make_ewsjf(max_queues=32)
+    res = run_comparison(scheds, wl, cost_model(), engine_params())
+    rows = []
+    for name, r in res.items():
+        rows.append({
+            "method": name,
+            "time_s": round(r.total_time, 1),
+            "req_s": round(r.req_per_s, 2),
+            "tok_s": round(r.tok_per_s, 1),
+        })
+    return rows
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    base = next(r for r in rows if r["method"] == "fcfs_1q")
+    for r in rows:
+        sp = r["tok_s"] / max(base["tok_s"], 1e-9) - 1.0
+        print(f"table3,{us/len(rows):.0f},"
+              f"{r['method']}|req_s={r['req_s']}|tok_s={r['tok_s']}|"
+              f"speedup={sp*100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Tables 4-7 + Figure 3 — throughput vs workload size x arrival rate.
+
+FCFS vs EWSJF at sizes {10k,30k,50k,200k}xSCALE and rates {10,20,40,60,100}.
+Expected structure (paper): FCFS goodput flat in rate; EWSJF gain grows with
+contention (+5..13% at low rate -> +40..54% at high rate)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ServingSimulator, WorkloadSpec, run_comparison
+
+from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+
+# Paper SS6.5: each size is a different composition (Short-Heavy /
+# Moderate / Balanced / Production Scale).
+SIZES = {
+    "10k_short_heavy": (10_000, dict(short_frac=0.9)),
+    "30k_moderate": (30_000, dict(short_frac=0.8)),
+    "50k_balanced": (50_000, dict(short_frac=0.6)),
+    "200k_production": (200_000, dict(short_frac=0.75,
+                                      long_range=(512, 4096))),
+}
+RATES = (10.0, 20.0, 40.0, 60.0, 100.0)
+
+
+def run(sizes=("10k_short_heavy", "30k_moderate"), rates=RATES, seed: int = 0):
+    rows = []
+    for sz in sizes:
+        n0, mix = SIZES[sz]
+        n = max(1200, int(n0 * SCALE))
+        for rate in rates:
+            wl = WorkloadSpec(n_requests=n, arrival_rate=rate, seed=seed,
+                              **mix)
+            res = run_comparison({"fcfs": make_fcfs(), "ewsjf": make_ewsjf()},
+                                 wl, cost_model(), engine_params())
+            f, e = res["fcfs"], res["ewsjf"]
+            rows.append({
+                "size": sz, "rate": rate,
+                "fcfs_req_s": round(f.req_per_s, 2),
+                "fcfs_tok_s": round(f.tok_per_s, 1),
+                "ewsjf_req_s": round(e.req_per_s, 2),
+                "ewsjf_tok_s": round(e.tok_per_s, 1),
+                "speedup_pct": round((e.tok_per_s / max(f.tok_per_s, 1e-9)
+                                      - 1) * 100, 1),
+                "fcfs_abort": round(f.abort_rate * 100, 1),
+                "ewsjf_abort": round(e.abort_rate * 100, 1),
+            })
+    return rows
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        print(f"tables4to7,{us:.0f},"
+              f"size={r['size']}|rate={r['rate']:.0f}|"
+              f"fcfs_tok_s={r['fcfs_tok_s']}|ewsjf_tok_s={r['ewsjf_tok_s']}|"
+              f"speedup={r['speedup_pct']:+.1f}%|"
+              f"aborts_fcfs={r['fcfs_abort']}%|aborts_ewsjf={r['ewsjf_abort']}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Tables 8-9 + Figure 4 — single-regime workloads vs queue count.
+
+Short-prompt (30k-scale) and long-prompt (10k-scale) workloads under
+EWSJF with queue budgets {5,10,20,30,40} vs FCFS.  Expected: throughput
+rises with queue count, saturating around 20-30 queues (Fig 4)."""
+
+from __future__ import annotations
+
+import copy
+import time
+
+from repro.core import ServingSimulator, uniform_workload
+
+from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+
+QUEUE_COUNTS = (5, 10, 20, 30, 40)
+
+
+def run(seed: int = 0):
+    rows = []
+    for regime, (lo, hi, n0, rate) in {
+        "short": (32, 512, 30_000, 60.0),
+        "long": (1024, 4096, 10_000, 5.0),
+    }.items():
+        n = max(2500 if regime == "short" else 1000, int(n0 * SCALE))
+        base = uniform_workload(n, lo, hi, rate, seed=seed)
+        sim = ServingSimulator(make_fcfs(), cost_model(), engine_params())
+        r = sim.run(copy.deepcopy(base))
+        rows.append({"regime": regime, "method": "fcfs", "queues": 1,
+                     "req_s": round(r.req_per_s, 2),
+                     "tok_s": round(r.tok_per_s, 1)})
+        for k in QUEUE_COUNTS:
+            sim = ServingSimulator(make_ewsjf(max_queues=k), cost_model(),
+                                   engine_params())
+            r = sim.run(copy.deepcopy(base))
+            rows.append({"regime": regime, "method": f"ewsjf", "queues": k,
+                         "req_s": round(r.req_per_s, 2),
+                         "tok_s": round(r.tok_per_s, 1)})
+    return rows
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        print(f"tables8to9,{us:.0f},"
+              f"regime={r['regime']}|method={r['method']}|queues={r['queues']}|"
+              f"req_s={r['req_s']}|tok_s={r['tok_s']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver — one section per paper table/figure (DESIGN.md SS6).
+
+    PYTHONPATH=src:. python -m benchmarks.run            # CSV to stdout
+    BENCH_SCALE=1.0 ... python -m benchmarks.run         # paper-scale sweeps
+
+CSV convention: ``name,us_per_call,derived`` (derived = |-separated
+key=value results; paper-claim checks inline)."""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_kernels, bench_meta_optimizer, bench_padding,
+                   bench_scheduler_overhead, bench_table3_queue_count,
+                   bench_table10_summary, bench_tables4to7_load,
+                   bench_tables8to9_regimes, bench_ttft_starvation)
+    sections = [
+        ("Table 3 (queue count)", bench_table3_queue_count.main),
+        ("Tables 4-7 / Fig 3 (load sweep)", bench_tables4to7_load.main),
+        ("Tables 8-9 / Fig 4 (regimes x queues)", bench_tables8to9_regimes.main),
+        ("Table 10 (summary)", bench_table10_summary.main),
+        ("TTFT + starvation (SS1, App C)", bench_ttft_starvation.main),
+        ("Meta-optimizer (App B / Fig 5)", bench_meta_optimizer.main),
+        ("Scheduler overhead (SS5/Table 11)", bench_scheduler_overhead.main),
+        ("TPU padding waste (beyond-paper)", bench_padding.main),
+        ("Pallas kernels", bench_kernels.main),
+    ]
+    t0 = time.time()
+    failures = 0
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"# FAILED: {title}", file=sys.stderr)
+            traceback.print_exc()
+    print(f"# total wall: {time.time()-t0:.1f}s; failures: {failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Multi-pod serving with failures, stragglers and elastic scaling:
+EWSJF as the global admission layer (DESIGN.md SS3, beyond-paper scope).
+
+    PYTHONPATH=src python examples/multi_pod_cluster.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, Request
+from repro.distributed import ClusterConfig, ClusterController
+
+
+def main() -> None:
+    sched = EWSJFScheduler(EWSJFConfig(min_history=16))
+    ctl = ClusterController(sched, CostModel(),
+                            ClusterConfig(n_pods=4, max_inflight_per_pod=32))
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        ctl.sched.submit(Request(prompt_len=int(rng.integers(32, 4096)),
+                                 max_new_tokens=32), now=0.0)
+
+    ctl.pods[3].speed = 0.1                     # pod 3 is a straggler
+    for i in range(120):
+        ctl.route_step()
+        if i == 10:
+            print("!! pod 0 hard-fails (in-flight work re-enqueued)")
+            ctl.remove_pod(0, graceful=False)
+        if i == 30:
+            pid = ctl.add_pod(speed=1.2)
+            print(f"++ elastic scale-up: pod {pid} joins")
+        ctl.advance(2.0)
+        drained = ctl.check_health()
+        for p in drained:
+            print(f"~~ pod {p} drained (straggler/timeout)")
+
+    print(f"\nserved {len(ctl.finished)}/200 requests; "
+          f"re-enqueued after failure: {ctl.reenqueued}")
+    for pid, p in sorted(ctl.pods.items()):
+        print(f"   pod {pid}: served={p.served:4d} alive={p.alive} "
+              f"speed={p.speed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""EWSJF core — the paper's contribution (adaptive request-level scheduling).
+
+Public API:
+    Request, QueueBounds, MetaParams, SchedulerPolicy, BatchPlan
+    refine_and_prune, kmeans_partition, PartitionConfig
+    EWSJFScheduler, FCFSScheduler, SJFScheduler, make_scheduler
+    BayesianMetaOptimizer
+    CostModel, ServingSimulator, WorkloadSpec
+"""
+
+from .batch_builder import BatchBudget, BatchBuilder, DEFAULT_BUCKETS
+from .cost_model import CostModel, ModelCostParams, make_cost_fn
+from .meta_optimizer import BayesianMetaOptimizer
+from .monitor import Monitor, RewardWeights, reward, reward_terms
+from .partition import (PartitionConfig, kmeans_partition, refine_and_prune,
+                        static_partition, validate_partition)
+from .queues import BubbleConfig, QueueManager, SchedulerQueue
+from .scheduler import (BaseScheduler, EWSJFConfig, EWSJFScheduler,
+                        FCFSScheduler, SJFScheduler, StaticPriorityScheduler,
+                        make_scheduler)
+from .scoring import QueueProfile, compute_score, score_decomposition, weights_for_queue
+from .simulator import (EngineParams, ServingSimulator, SimResult,
+                        WorkloadSpec, run_comparison, uniform_workload)
+from .types import (BatchPlan, MetaParams, QueueBounds, Request, RequestState,
+                    SchedulerPolicy, ScoringWeights)
+
+__all__ = [
+    "BatchBudget", "BatchBuilder", "DEFAULT_BUCKETS",
+    "CostModel", "ModelCostParams", "make_cost_fn",
+    "BayesianMetaOptimizer",
+    "Monitor", "RewardWeights", "reward", "reward_terms",
+    "PartitionConfig", "kmeans_partition", "refine_and_prune",
+    "static_partition", "validate_partition",
+    "BubbleConfig", "QueueManager", "SchedulerQueue",
+    "BaseScheduler", "EWSJFConfig", "EWSJFScheduler", "FCFSScheduler",
+    "SJFScheduler", "StaticPriorityScheduler", "make_scheduler",
+    "QueueProfile", "compute_score", "score_decomposition", "weights_for_queue",
+    "EngineParams", "ServingSimulator", "SimResult", "WorkloadSpec",
+    "run_comparison", "uniform_workload",
+    "BatchPlan", "MetaParams", "QueueBounds", "Request", "RequestState",
+    "SchedulerPolicy", "ScoringWeights",
+]

@@ -1,0 +1,341 @@
+"""Scheduler policies: EWSJF (the paper) + FCFS / SJF / static-priority
+baselines, behind one pluggable interface (the vLLM-RFC-style plug point).
+
+`SchedulerPolicy.tick(now, budget)` is the tactical loop — called by the
+engine (or simulator) at every scheduling opportunity; it returns a
+BatchPlan.  `submit(req)` routes arrivals.  The strategic loop runs via
+`maybe_reoptimize(now)`, which (a) refreshes the queue structure with
+Refine-and-Prune on the monitor's window and (b) advances the Bayesian
+meta-optimizer one trial when the trial interval elapses.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .batch_builder import BatchBudget, BatchBuilder
+from .cost_model import CostModel, make_cost_fn
+from .meta_optimizer import BayesianMetaOptimizer
+from .monitor import Monitor, RewardWeights, WindowStats, reward, reward_terms
+from .partition import PartitionConfig, kmeans_partition, refine_and_prune
+from .queues import QueueManager
+from .scoring import compute_score
+from .types import BatchPlan, MetaParams, QueueBounds, Request, SchedulerPolicy
+
+
+class BaseScheduler:
+    """Interface every admission policy implements."""
+
+    name = "base"
+
+    def submit(self, req: Request, now: float) -> None:
+        raise NotImplementedError
+
+    def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
+        raise NotImplementedError
+
+    def on_finish(self, req: Request, now: float) -> None:  # optional hook
+        pass
+
+    def waiting(self) -> int:
+        raise NotImplementedError
+
+    def state_dict(self) -> dict:            # checkpointing hook
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        pass
+
+
+# --------------------------------------------------------------------------
+# Baselines
+# --------------------------------------------------------------------------
+
+class FCFSScheduler(BaseScheduler):
+    """vLLM default: single FIFO queue."""
+
+    name = "fcfs"
+
+    def __init__(self):
+        self.queue: list[Request] = []
+
+    def submit(self, req: Request, now: float) -> None:
+        req.enqueue_time = now
+        self.queue.append(req)
+
+    def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
+        plan = BatchPlan(requests=[])
+        free = budget.kv_blocks_free
+        used = 0
+        while self.queue and len(plan.requests) < budget.max_requests:
+            head = self.queue[0]
+            if plan.requests and plan.total_tokens + head.prompt_len > budget.max_tokens:
+                break
+            if free is not None:
+                need = budget.blocks_needed(head)
+                if used + need > free:
+                    break
+                used += need
+            plan.requests.append(self.queue.pop(0))
+            plan.total_tokens += int(head.prompt_len)
+        if plan.requests:
+            from .batch_builder import DEFAULT_BUCKETS, _bucket_edge
+            edge = _bucket_edge(max(r.prompt_len for r in plan.requests),
+                                DEFAULT_BUCKETS)
+            plan.padded_tokens = edge * len(plan.requests)
+        return plan
+
+    def waiting(self) -> int:
+        return len(self.queue)
+
+
+class SJFScheduler(FCFSScheduler):
+    """Greedy shortest-job-first (App. C starvation baseline)."""
+
+    name = "sjf"
+
+    def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
+        self.queue.sort(key=lambda r: (r.prompt_len, r.arrival_time))
+        return super().tick(now, budget)
+
+
+class StaticPriorityScheduler(FCFSScheduler):
+    """Coarse two-class static priority (short first), the 'static queues'
+    strawman from §1."""
+
+    name = "static_priority"
+
+    def __init__(self, short_threshold: int = 256):
+        super().__init__()
+        self.short_threshold = short_threshold
+
+    def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
+        self.queue.sort(key=lambda r: (r.prompt_len > self.short_threshold,
+                                       r.arrival_time))
+        return super().tick(now, budget)
+
+
+# --------------------------------------------------------------------------
+# EWSJF
+# --------------------------------------------------------------------------
+
+@dataclass
+class EWSJFConfig:
+    max_queues: int = 32
+    empty_threshold: int = 50
+    history_cap: int = 200_000
+    reopt_interval: float = 60.0        # strategic Refine-and-Prune period (s)
+    trial_interval: float = 120.0       # Bayesian-optimizer trial length ΔT (s)
+    min_history: int = 64               # don't re-partition before this
+    short_threshold: float = 256.0
+    online_blend: float = 0.25          # online-mode boundary smoothing
+    enable_meta_opt: bool = True
+    enable_bubbles: bool = True
+    reward_weights: RewardWeights = field(default_factory=RewardWeights)
+    seed: int = 0
+
+
+class EWSJFScheduler(BaseScheduler):
+    """The paper's scheduler: Refine-and-Prune queues + density-weighted
+    scoring + bubble routing + Bayesian meta-optimization."""
+
+    name = "ewsjf"
+
+    def __init__(self, cfg: EWSJFConfig | None = None,
+                 cost_model: CostModel | None = None,
+                 initial_policy: Optional[SchedulerPolicy] = None,
+                 partitioner: Optional[Callable] = None):
+        self.cfg = cfg or EWSJFConfig()
+        self.cost_model = cost_model or CostModel()
+        self.c_prefill = make_cost_fn(self.cost_model)
+        self.monitor = Monitor(history_cap=self.cfg.history_cap,
+                               short_threshold=self.cfg.short_threshold)
+        self.meta_opt = BayesianMetaOptimizer(seed=self.cfg.seed,
+                                              max_queues=self.cfg.max_queues)
+        self.partitioner = partitioner  # override for k-means ablations
+        meta = (initial_policy.meta if initial_policy
+                else MetaParams(max_queues=self.cfg.max_queues))
+        bounds = (initial_policy.boundaries if initial_policy
+                  else [QueueBounds(0.0, float("inf"))])
+        self.manager = QueueManager(bounds, meta,
+                                    empty_threshold=self.cfg.empty_threshold)
+        self._last_reopt = 0.0
+        self._trial_start = 0.0
+        self._trial_meta: Optional[MetaParams] = None
+        self._trial_finish_mark = 0
+        self._trial_token_mark = 0
+        self.tick_count = 0
+        self.reopt_count = 0
+
+    # ---- request path ----------------------------------------------------
+
+    def submit(self, req: Request, now: float) -> None:
+        req.enqueue_time = now
+        self.monitor.observe_arrival(req)
+        if self.cfg.enable_bubbles:
+            self.manager.route(req)
+        else:
+            q = self.manager.queues[self.manager._find_interval(req.prompt_len)]
+            q.push(req)
+            req.queue_id = q.queue_id
+
+    def on_finish(self, req: Request, now: float) -> None:
+        self.monitor.observe_finish(req)
+
+    def waiting(self) -> int:
+        return self.manager.waiting_count()
+
+    # ---- tactical loop (Algorithm 1) --------------------------------------
+
+    def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
+        self.tick_count += 1
+        profiles = self.manager.profiles()
+        updated_scores: dict[int, float] = {}
+        for q in self.manager.queues:
+            if len(q):
+                req = q.peek()
+                updated_scores[q.queue_id] = compute_score(
+                    req, profiles[q.queue_id], now, self.c_prefill)
+        self.manager.prune_empty()
+        if not updated_scores:
+            return BatchPlan(requests=[])
+        primary_id = max(updated_scores, key=updated_scores.get)
+        primary = next(q for q in self.manager.queues
+                       if q.queue_id == primary_id)
+        builder = BatchBuilder(budget)
+        return builder.build(self.manager, primary, now)
+
+    # ---- strategic loop ----------------------------------------------------
+
+    def maybe_reoptimize(self, now: float, force: bool = False) -> bool:
+        """Run the strategic loop if its period elapsed.  Returns True when a
+        new policy was installed."""
+        acted = False
+        if self.cfg.enable_meta_opt:
+            self._advance_trial(now)
+        # Bootstrap: the paper's offline mode installs a baseline policy
+        # before live serving; a cold single-queue start re-partitions as
+        # soon as min_history is available rather than waiting a period.
+        if (len(self.manager.queues) == 1
+                and len(self.monitor.history) >= self.cfg.min_history):
+            force = True
+        if force or now - self._last_reopt >= self.cfg.reopt_interval:
+            lengths = self.monitor.historical_lengths()
+            if len(lengths) >= self.cfg.min_history:
+                self._repartition(lengths)
+                self._last_reopt = now
+                self.reopt_count += 1
+                acted = True
+        return acted
+
+    def _current_meta(self) -> MetaParams:
+        return self._trial_meta or self.manager.meta
+
+    def _repartition(self, lengths: np.ndarray) -> None:
+        meta = self._current_meta()
+        if self.partitioner is not None:
+            bounds = self.partitioner(lengths)
+        else:
+            pcfg = PartitionConfig(alpha_split=meta.alpha_split,
+                                   max_queues=meta.max_queues)
+            bounds = refine_and_prune(lengths, pcfg)
+        self.manager.apply_policy(bounds, meta)
+
+    def online_adjust(self, now: float) -> None:
+        """Online (real-time) mode (§3.1): lightweight boundary nudges from
+        the recent window instead of the full Refine-and-Prune — cheap
+        statistical recentering of interior edges toward recent quantiles."""
+        recent = self.monitor.recent_lengths()
+        if len(recent) < 32 or len(self.manager.queues) < 2:
+            return
+        k = len(self.manager.queues)
+        qs = np.quantile(recent, np.linspace(0, 1, k + 1)[1:-1])
+        blend = self.cfg.online_blend
+        for i, q in enumerate(self.manager.queues[:-1]):
+            tgt = float(qs[i]) if i < len(qs) else q.bounds.hi
+            if q.bounds.hi == float("inf"):
+                continue
+            new_hi = (1 - blend) * q.bounds.hi + blend * tgt
+            nxt = self.manager.queues[i + 1]
+            new_hi = min(max(new_hi, q.bounds.lo + 1.0),
+                         nxt.bounds.hi - 1.0 if nxt.bounds.hi != float("inf")
+                         else new_hi)
+            q.bounds = QueueBounds(q.bounds.lo, new_hi)
+            nxt.bounds = QueueBounds(new_hi, nxt.bounds.hi)
+
+    def _advance_trial(self, now: float) -> None:
+        if self._trial_meta is None:
+            self._trial_meta = self.meta_opt.suggest()
+            self._trial_start = now
+            self._trial_finish_mark = self.monitor.total_finished
+            self._trial_token_mark = self.monitor.total_tokens_out
+            return
+        if now - self._trial_start < self.cfg.trial_interval:
+            return
+        # Close the trial: compute reward over the trial window.
+        elapsed = max(now - self._trial_start, 1e-9)
+        stats = self.monitor.window_stats(elapsed)
+        qlens = [np.asarray([r.prompt_len for r in q.requests], dtype=np.float64)
+                 for q in self.manager.queues]
+        terms = reward_terms(qlens, stats, len(self.manager.queues))
+        tokens = self.monitor.total_tokens_out - self._trial_token_mark
+        thr_bonus = tokens / elapsed / 1000.0
+        r = reward(terms, self.cfg.reward_weights, throughput_bonus=thr_bonus)
+        self.meta_opt.observe(self._trial_meta, r)
+        nxt = self.meta_opt.suggest()
+        self._trial_meta = nxt
+        self._trial_start = now
+        self._trial_finish_mark = self.monitor.total_finished
+        self._trial_token_mark = self.monitor.total_tokens_out
+
+    # ---- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "meta": self._current_meta().__dict__,
+            "bounds": [(q.bounds.lo, q.bounds.hi, q.is_bubble)
+                       for q in self.manager.queues],
+            "history": list(self.monitor.history)[-10_000:],
+            "trials": [(t.theta.tolist(), t.reward)
+                       for t in self.meta_opt.trials],
+            "waiting": [
+                {"prompt_len": r.prompt_len, "arrival_time": r.arrival_time,
+                 "max_new_tokens": r.max_new_tokens, "request_id": r.request_id}
+                for q in self.manager.queues for r in q.requests],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        meta = MetaParams(**state["meta"])
+        bounds = [QueueBounds(lo, hi) for lo, hi, _ in state["bounds"]]
+        self.manager.apply_policy(bounds, meta)
+        for i, (_, _, is_bubble) in enumerate(state["bounds"]):
+            self.manager.queues[i].is_bubble = is_bubble
+        self.monitor.history.extend(state["history"])
+        import numpy as _np
+        from .meta_optimizer import Trial
+        self.meta_opt.trials = [Trial(_np.asarray(t), r)
+                                for t, r in state["trials"]]
+        for spec in state["waiting"]:
+            req = Request(prompt_len=spec["prompt_len"],
+                          arrival_time=spec["arrival_time"],
+                          max_new_tokens=spec["max_new_tokens"])
+            # interval-only routing: the restored bounds already include any
+            # bubbles that existed at save time.
+            self.monitor.observe_arrival(req)
+            self.manager.route(req, allow_bubble=False)
+
+
+def make_scheduler(name: str, **kw) -> BaseScheduler:
+    registry = {
+        "fcfs": FCFSScheduler,
+        "sjf": SJFScheduler,
+        "static_priority": StaticPriorityScheduler,
+        "ewsjf": EWSJFScheduler,
+    }
+    if name not in registry:
+        raise ValueError(f"unknown scheduler '{name}'; have {sorted(registry)}")
+    return registry[name](**kw)

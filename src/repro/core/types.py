@@ -1,0 +1,153 @@
+"""Core datatypes shared by the EWSJF scheduler stack.
+
+The scheduler is a host-side control layer (as in the paper, where it sits
+above vLLM's execution engine), so these are plain Python dataclasses, not
+pytrees.  The jit'd engine below consumes the batches this layer emits.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Optional
+
+_REQUEST_COUNTER = itertools.count()
+
+
+class RequestState(Enum):
+    WAITING = "waiting"        # in a scheduler queue, not yet admitted
+    RUNNING_PREFILL = "prefill"
+    RUNNING_DECODE = "decode"
+    PREEMPTED = "preempted"    # evicted (KV pressure); will be re-enqueued
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclass
+class Request:
+    """One inference request as seen by the admission scheduler.
+
+    ``prompt_len`` is the *input-side* signal EWSJF schedules on (the paper
+    deliberately avoids output-length predictors, §2.3).
+    """
+
+    prompt_len: int
+    arrival_time: float = 0.0
+    max_new_tokens: int = 128
+    request_id: int = field(default_factory=lambda: next(_REQUEST_COUNTER))
+    prompt_tokens: Optional[Any] = None     # int array when actually executing
+    priority_class: int = 0                 # optional operator hint (unused by EWSJF)
+
+    # Lifecycle bookkeeping (filled in by the engine / simulator).
+    state: RequestState = RequestState.WAITING
+    enqueue_time: float = 0.0               # when routed into a queue
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    generated: int = 0
+    queue_id: Optional[int] = None
+    preemptions: int = 0
+
+    def wait_time(self, now: float) -> float:
+        return max(0.0, now - self.arrival_time)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+
+@dataclass(frozen=True)
+class QueueBounds:
+    """Closed prompt-length interval [lo, hi] owned by one queue."""
+
+    lo: float
+    hi: float
+
+    def contains(self, b: float) -> bool:
+        return self.lo <= b <= self.hi
+
+    @property
+    def width(self) -> float:
+        return self.hi - self.lo
+
+    @property
+    def center(self) -> float:
+        return 0.5 * (self.lo + self.hi)
+
+
+@dataclass
+class ScoringWeights:
+    """Instantiated weights for one queue (Eq. 1 / Eq. 4)."""
+
+    w_base: float = 1.0
+    w_urgency: float = 1.0
+    w_fairness: float = 1.0
+
+
+@dataclass
+class MetaParams:
+    """Meta-policy parameters Θ tuned by the Bayesian optimizer (§4.4.2).
+
+    Each scoring weight is produced by a linear map on the queue's mean
+    prompt length  w(b̄_q) = a·b̄_q/B_norm + b , with B_norm a fixed length
+    normalizer so the slopes are O(1).
+    """
+
+    a_urg: float = -0.5
+    b_urg: float = 1.5
+    a_fair: float = 0.8
+    b_fair: float = 0.2
+    a_base: float = 0.0
+    b_base: float = 1.0
+    alpha_split: float = 3.0        # Refine-and-Prune significance ratio α (Eq. 2)
+    max_queues: int = 32            # Stage-3 pruning budget
+    b_norm: float = 2048.0          # length normalizer for the meta-policy
+
+    def as_vector(self) -> list[float]:
+        return [self.a_urg, self.b_urg, self.a_fair, self.b_fair,
+                self.a_base, self.b_base, self.alpha_split]
+
+    @staticmethod
+    def from_vector(v, max_queues: int = 32, b_norm: float = 2048.0) -> "MetaParams":
+        return MetaParams(a_urg=float(v[0]), b_urg=float(v[1]),
+                          a_fair=float(v[2]), b_fair=float(v[3]),
+                          a_base=float(v[4]), b_base=float(v[5]),
+                          alpha_split=float(v[6]),
+                          max_queues=max_queues, b_norm=b_norm)
+
+
+@dataclass
+class SchedulerPolicy:
+    """One complete policy emitted by the strategic loop (§3.1):
+    queue structure (interval boundaries) + scoring meta-parameters."""
+
+    boundaries: list[QueueBounds]
+    meta: MetaParams
+
+    def n_queues(self) -> int:
+        return len(self.boundaries)
+
+
+@dataclass
+class BatchPlan:
+    """What the tactical loop hands the engine for one step (Alg. 1 output)."""
+
+    requests: list[Request]
+    primary_queue: Optional[int] = None
+    backfill_queues: list[int] = field(default_factory=list)
+    total_tokens: int = 0
+    padded_tokens: int = 0          # bucket-padded token count (TPU adaptation)
+
+    @property
+    def padding_waste(self) -> float:
+        if self.padded_tokens <= 0:
+            return 0.0
+        return 1.0 - self.total_tokens / self.padded_tokens

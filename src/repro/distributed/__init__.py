@@ -1,0 +1,6 @@
+"""Distribution: sharding rules, fault tolerance, elasticity."""
+from .fault_tolerance import ClusterConfig, ClusterController, PodState
+from .sharding import ShardingPolicy, batch_axes_for
+
+__all__ = ["ShardingPolicy", "batch_axes_for", "ClusterController",
+           "ClusterConfig", "PodState"]

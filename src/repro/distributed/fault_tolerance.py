@@ -1,0 +1,191 @@
+"""Fault tolerance & elasticity for the multi-pod serving cluster.
+
+EWSJF extends naturally to the 1000+-node regime as the *global admission
+layer* (DESIGN.md §3): each pod runs an engine replica; a cluster
+controller routes requests to pods, monitors heartbeats, and reacts to
+failures/stragglers.  On this CPU container the pod engines are simulated
+actors driven by the same cost model as core/simulator.py, but the control
+logic (what a production deployment exercises) is real:
+
+  * heartbeat-based failure detection → in-flight requests of a dead pod
+    are re-enqueued globally (recompute recovery, no KV migration);
+  * straggler mitigation — a pod whose step latency EWMA exceeds
+    ``straggler_factor`` × cluster median is drained: no new admissions,
+    existing work finishes, queued work is re-routed;
+  * elastic scaling — pods can join/leave; the router re-balances by
+    shortest-expected-completion (queue cost / pod speed);
+  * scheduler-state checkpointing — the EWSJF strategic state (partition +
+    Θ trials) is periodically snapshotted so a controller restart resumes
+    with the learned policy instead of re-exploring (tested in
+    tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from ..core.batch_builder import BatchBudget
+from ..core.cost_model import CostModel
+from ..core.scheduler import BaseScheduler, EWSJFScheduler
+from ..core.types import Request, RequestState
+
+
+@dataclass
+class PodState:
+    pod_id: int
+    speed: float = 1.0                 # relative throughput multiplier
+    alive: bool = True
+    draining: bool = False
+    inflight: list = field(default_factory=list)   # requests being served
+    last_heartbeat: float = 0.0
+    step_ewma: float = 0.0             # smoothed step latency
+    busy_until: float = 0.0
+    served: int = 0
+
+
+@dataclass
+class ClusterConfig:
+    n_pods: int = 2
+    heartbeat_timeout: float = 5.0
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    max_inflight_per_pod: int = 64
+    pod_prefill_tokens: int = 8192
+
+
+class ClusterController:
+    """Global EWSJF admission + pod routing + failure handling."""
+
+    def __init__(self, scheduler: BaseScheduler, cost: CostModel,
+                 ccfg: ClusterConfig | None = None):
+        self.sched = scheduler
+        self.cost = cost
+        self.cfg = ccfg or ClusterConfig()
+        self.pods: dict[int, PodState] = {
+            i: PodState(pod_id=i) for i in range(self.cfg.n_pods)}
+        self.finished: list[Request] = []
+        self.reenqueued = 0
+        self.now = 0.0
+
+    # ---- membership / elasticity -----------------------------------------
+
+    def add_pod(self, speed: float = 1.0) -> int:
+        pid = max(self.pods) + 1 if self.pods else 0
+        self.pods[pid] = PodState(pod_id=pid, speed=speed,
+                                  last_heartbeat=self.now)
+        return pid
+
+    def remove_pod(self, pod_id: int, graceful: bool = True) -> None:
+        pod = self.pods[pod_id]
+        if graceful:
+            pod.draining = True
+        else:
+            self._fail_pod(pod)
+
+    # ---- failure handling ---------------------------------------------------
+
+    def heartbeat(self, pod_id: int, step_latency: float) -> None:
+        pod = self.pods[pod_id]
+        pod.last_heartbeat = self.now
+        a = self.cfg.ewma_alpha
+        pod.step_ewma = ((1 - a) * pod.step_ewma + a * step_latency
+                         if pod.step_ewma else step_latency)
+
+    def _fail_pod(self, pod: PodState) -> None:
+        pod.alive = False
+        for req in pod.inflight:
+            req.state = RequestState.PREEMPTED
+            req.preemptions += 1
+            req.generated = 0
+            req.first_token_time = None
+            self.sched.submit(req, now=self.now)
+            self.reenqueued += 1
+        pod.inflight = []
+
+    def check_health(self) -> list[int]:
+        """Detect dead + straggler pods. Returns affected pod ids."""
+        affected = []
+        alive = [p for p in self.pods.values() if p.alive]
+        for pod in alive:
+            if self.now - pod.last_heartbeat > self.cfg.heartbeat_timeout:
+                self._fail_pod(pod)
+                affected.append(pod.pod_id)
+        ewmas = [p.step_ewma for p in alive if p.step_ewma > 0 and p.alive]
+        if len(ewmas) >= 2:
+            med = float(np.median(ewmas))
+            for pod in alive:
+                if (pod.alive and not pod.draining and pod.step_ewma
+                        > self.cfg.straggler_factor * med):
+                    pod.draining = True          # straggler: drain
+                    affected.append(pod.pod_id)
+        return affected
+
+    # ---- routing ----------------------------------------------------------
+
+    def schedulable_pods(self) -> list[PodState]:
+        return [p for p in self.pods.values()
+                if p.alive and not p.draining
+                and len(p.inflight) < self.cfg.max_inflight_per_pod]
+
+    def route_step(self) -> int:
+        """One admission round: EWSJF picks the batch, the router places it
+        on the least-loaded schedulable pod.  Returns #requests placed."""
+        pods = self.schedulable_pods()
+        if not pods or self.sched.waiting() == 0:
+            return 0
+        pod = min(pods, key=lambda p:
+                  (p.busy_until - self.now) / max(p.speed, 1e-6))
+        budget = BatchBudget(
+            max_requests=self.cfg.max_inflight_per_pod - len(pod.inflight),
+            max_tokens=self.cfg.pod_prefill_tokens)
+        plan = self.sched.tick(self.now, budget)
+        for req in plan.requests:
+            pod.inflight.append(req)
+            req.state = RequestState.RUNNING_PREFILL
+        if plan.requests:
+            # charge the pod with the batch's estimated service time
+            t = sum(self.cost.c_prefill(r.prompt_len)
+                    + r.max_new_tokens * self.cost.decode_step_time(
+                        1, r.prompt_len) for r in plan.requests)
+            pod.busy_until = max(pod.busy_until, self.now) + t / pod.speed
+        return len(plan.requests)
+
+    def advance(self, dt: float) -> None:
+        """Advance simulated time; pods complete work that fits."""
+        self.now += dt
+        for pod in self.pods.values():
+            if not pod.alive:
+                continue
+            self.heartbeat(pod.pod_id,
+                           step_latency=1.0 / max(pod.speed, 1e-6))
+            if pod.inflight and pod.busy_until <= self.now:
+                for req in pod.inflight:
+                    req.state = RequestState.FINISHED
+                    req.first_token_time = req.first_token_time or self.now
+                    req.finish_time = self.now
+                    req.generated = req.max_new_tokens
+                    self.finished.append(req)
+                    self.sched.on_finish(req, self.now)
+                    pod.served += 1
+                pod.inflight = []
+                if pod.draining:
+                    pod.alive = False
+
+    # ---- scheduler-state checkpointing ---------------------------------------
+
+    def save_state(self, path: str | Path) -> None:
+        state = {"now": self.now,
+                 "scheduler": self.sched.state_dict(),
+                 "pods": {pid: {"speed": p.speed, "alive": p.alive}
+                          for pid, p in self.pods.items()}}
+        Path(path).write_text(json.dumps(state))
+
+    def load_state(self, path: str | Path) -> None:
+        state = json.loads(Path(path).read_text())
+        self.now = state["now"]
+        self.sched.load_state_dict(state["scheduler"])

@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Design for the TPU memory hierarchy (DESIGN.md §3):
+  * grid (B, H, nq, nkv) — the innermost (nkv) dimension iterates
+    sequentially per core, so the online-softmax state lives in VMEM
+    scratch across kv steps;
+  * BlockSpecs stage (bq, hd) query tiles and (bkv, hd) KV tiles
+    HBM→VMEM; hd and bq/bkv are multiples of 128 so the MXU sees aligned
+    matmuls (VMEM working set = q + k + v + acc ≈ 4·128·128·4B per tile
+    config well under the 16 MB budget);
+  * GQA is expressed in the k/v index_map (kv head = h // group) — no
+    KV duplication in HBM;
+  * causal + sliding-window masking by absolute position; fully-masked
+    tiles exit early via pl.when (the 2× upper-triangle waste of the XLA
+    blockwise path disappears here).
+
+Accumulation in fp32; inputs/outputs bf16 or f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bkv: int, nkv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bkv
+
+    # Tile-level early exit: skip tiles entirely above the causal diagonal
+    # or entirely left of the window band.
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + bq - 1)
+    if window and window > 0:
+        run = run & (k_start + bkv - 1 > q_start - window)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window and window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         scale: float | None = None, block_q: int = 128,
+                         block_kv: int = 128, interpret: bool = False):
+    """q (B,H,S,hd); k/v (B,K,T,hd); H = K·G.  Returns (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    bq = min(block_q, S)
+    while S % bq:
+        bq //= 2
+    bkv = min(block_kv, T)
+    while T % bkv:
+        bkv //= 2
+    nq, nkv = S // bq, T // bkv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, nkv=nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

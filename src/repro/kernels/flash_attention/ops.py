@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model layout (B, S, H, hd) / (B, T, K, hd), transposes to the
+kernel layout, and dispatches to the Pallas kernel (TPU) or the pure-jnp
+oracle (CPU fallback).  ``interpret=True`` runs the kernel body in the
+Pallas interpreter for CPU validation."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+from .ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "block_q",
+                                   "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "pallas_interpret", block_q: int = 128,
+                    block_kv: int = 128):
+    """q (B,S,H,hd); k/v (B,T,K,hd) → (B,S,H,hd).
+
+    impl: 'pallas' (TPU), 'pallas_interpret' (CPU validation), 'ref'."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "ref":
+        out = flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention_bhsd(
+            qt, kt, vt, causal=causal, window=window, block_q=block_q,
+            block_kv=block_kv, interpret=(impl == "pallas_interpret"))
+    return out.transpose(0, 2, 1, 3)

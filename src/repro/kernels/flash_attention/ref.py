@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense softmax, same
+GQA/causal/window semantics, fp32 accumulation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q (B,H,S,hd); k/v (B,K,T,hd). Returns (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    q_pos = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    mask = jnp.ones((S, T), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

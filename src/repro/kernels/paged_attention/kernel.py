@@ -1,0 +1,115 @@
+"""Pallas TPU paged-attention (decode) kernel.
+
+TPU-native port of vLLM's PagedAttention (DESIGN.md §3): there is no
+warp-level gather on TPU, so the page indirection is expressed through
+*scalar-prefetched* block tables — the grid's page step uses
+``block_table[b, ip]`` inside the k/v index_map, and the Pallas pipeline
+DMAs the right page HBM→VMEM one step ahead.
+
+  q           (B, H, hd)            — one token per sequence
+  k/v_pages   (P, page, K, hd)      — global paged KV pool
+  block_table (B, max_pages) i32    — physical page per (seq, logical page)
+  seq_lens    (B,) i32              — tokens currently in each sequence
+
+Grid (B, H, max_pages); online softmax across the page dimension in VMEM
+scratch; positions ≥ seq_len are masked; pages past the sequence's last
+page exit early via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _paged_kernel(block_table_ref, seq_lens_ref,        # scalar prefetch
+                  q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  scale: float, page: int, n_pages: int, group: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = seq_lens_ref[b]
+    in_range = ip * page < seq_len
+
+    @pl.when(in_range)
+    def _page():
+        q = q_ref[0].astype(jnp.float32)                     # (1, hd) row
+        k = k_ref[0, :, 0].astype(jnp.float32)               # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        mask = pos < seq_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None])[0].astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pages, v_pages, block_table, seq_lens, *,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """q (B,H,hd); k/v_pages (P,page,K,hd); block_table (B,max_pages);
+    seq_lens (B,).  Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    P, page, K, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page,
+                               n_pages=n_pages, group=G)
+
+    def q_map(b, h, ip, bt, sl):
+        return (b, h, 0)
+
+    def kv_map(b, h, ip, bt, sl):
+        return (bt[b, ip], 0, h // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), q_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, q, k_pages, v_pages)

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    impl: str = "pallas_interpret"):
+    """q (B,H,hd); k/v_pages (P,page,K,hd); block_table (B,max_pages) i32;
+    seq_lens (B,) i32 → (B,H,hd).
+
+    impl: 'pallas' (TPU), 'pallas_interpret' (CPU validation), 'ref'."""
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens)
+    return paged_attention_kernel(q, k_pages, v_pages, block_table, seq_lens,
+                                  interpret=(impl == "pallas_interpret"))

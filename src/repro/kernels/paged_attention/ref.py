@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged attention: gathers pages into a contiguous
+(B, T, K, hd) cache and runs dense masked attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def gather_pages(pages, block_table):
+    """pages (P, page, K, hd); block_table (B, n) → (B, n·page, K, hd)."""
+    g = pages[block_table]                       # (B, n, page, K, hd)
+    B, n, page, K, hd = g.shape
+    return g.reshape(B, n * page, K, hd)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens, *,
+                        scale: float | None = None):
+    """q (B,H,hd) → (B,H,hd)."""
+    B, H, hd = q.shape
+    K = k_pages.shape[2]
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+    k = gather_pages(k_pages, block_table)       # (B,T,K,hd)
+    v = gather_pages(v_pages, block_table)
+    T = k.shape[1]
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    pos = jax.lax.broadcasted_iota(jnp.int32, (B, T), 1)
+    mask = pos < seq_lens[:, None]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation.
+
+The chunked SSD algorithm (models/ssm.py) splits into (a) an intra-chunk
+quadratic part — the compute hot-spot, O(chunk²·P) per head — and (b) a
+cheap inter-chunk linear recurrence.  This kernel computes, per
+(batch, chunk, head) grid cell, entirely in VMEM:
+
+    cum      = cumsum(a)                       a = −exp(A_h)·dt   (Q,)
+    L        = exp(segsum(a))  (masked)                           (Q,Q)
+    scores   = (C Bᵀ) ∘ L                                          (Q,Q)
+    y_diag   = scores @ (x·dt)                                    (Q,P)
+    state    = Bᵀ·diag(exp(cum_last−cum)) @ (x·dt)                (N,P)
+    decay    = exp(cum)  /  chunk_decay = exp(cum_last)
+
+The inter-chunk scan and the y_off = C·h_prev·decay term stay in XLA
+(ops.py) — they are bandwidth-trivial.  Chunk length Q and head dim P are
+128-multiples for MXU alignment; VMEM per cell ≈ Q·(2N+P)·4 + Q²·4 ≈ 0.5 MB
+at (Q=128, N=128, P=64).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, decay_ref, cdecay_ref, *,
+                      Q: int, P: int, N: int):
+    # refs: x (1,1,Q,P) dt (1,1,Q) a (1,) b/c (1,1,Q,N)
+    x = x_ref[0, 0].astype(jnp.float32)                  # (Q,P)
+    dt = dt_ref[0, 0].astype(jnp.float32)                # (Q,)
+    A = a_ref[0]                                         # scalar
+    Bm = b_ref[0, 0].astype(jnp.float32)                 # (Q,N)
+    Cm = c_ref[0, 0].astype(jnp.float32)                 # (Q,N)
+
+    a = (-jnp.exp(A)) * dt                               # (Q,) log-decays
+    cum = jnp.cumsum(a)                                  # (Q,)
+    xd = x * dt[:, None]                                 # dt-weighted input
+
+    i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    seg = cum[:, None] - cum[None, :]
+    L = jnp.where(i >= j, jnp.exp(seg), 0.0)             # (Q,Q)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * L, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum)                   # (Q,)
+    state = jax.lax.dot_general(Bm * decay_end[:, None], xd,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    state_ref[0, 0] = state.astype(state_ref.dtype)      # (N,P)
+    decay_ref[0, 0] = jnp.exp(cum).astype(decay_ref.dtype)
+    cdecay_ref[0, 0] = jnp.exp(cum[-1]).astype(cdecay_ref.dtype)
+
+
+def ssd_chunk_call(x, dt, A, B, C, *, interpret: bool = False):
+    """Intra-chunk SSD over all (batch, chunk, head) cells.
+
+    x (b,nc,Q,H,P)  dt (b,nc,Q,H)  A (H,)  B,C (b,nc,Q,H,N)  — heads already
+    broadcast from groups.  Returns (y_diag, states, in_decay, chunk_decay):
+      y_diag (b,nc,Q,H,P), states (b,nc,H,N,P), in_decay (b,nc,Q,H),
+      chunk_decay (b,nc,H)."""
+    b, nc, Q, H, P = x.shape
+    N = B.shape[-1]
+    # kernel-friendly layout: head-major
+    xk = x.transpose(0, 3, 1, 2, 4).reshape(b * H, nc, Q, P)
+    dtk = dt.transpose(0, 3, 1, 2).reshape(b * H, nc, Q)
+    Bk = B.transpose(0, 3, 1, 2, 4).reshape(b * H, nc, Q, N)
+    Ck = C.transpose(0, 3, 1, 2, 4).reshape(b * H, nc, Q, N)
+    Ak = jnp.tile(A, b)                                   # (b*H,)
+
+    kernel = functools.partial(_ssd_chunk_kernel, Q=Q, P=P, N=N)
+    y, states, decay, cdecay = pl.pallas_call(
+        kernel,
+        grid=(b * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1,), lambda g, c: (g,)),
+            pl.BlockSpec((1, 1, Q, N), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda g, c: (g, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1), lambda g, c: (g, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * H, nc, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, nc, Q), jnp.float32),
+            jax.ShapeDtypeStruct((b * H, nc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xk, dtk, Ak, Bk, Ck)
+    y = y.reshape(b, H, nc, Q, P).transpose(0, 2, 3, 1, 4)
+    states = states.reshape(b, H, nc, N, P).transpose(0, 2, 1, 3, 4)
+    decay = decay.reshape(b, H, nc, Q).transpose(0, 2, 3, 1)
+    cdecay = cdecay.reshape(b, H, nc).transpose(0, 2, 1)
+    return y, states, decay, cdecay

@@ -1,0 +1,52 @@
+"""jit'd SSD wrapper: Pallas intra-chunk kernel + XLA inter-chunk scan."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_call
+from .ref import ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, impl: str = "pallas_interpret"):
+    """Full SSD: x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,g,n).
+    Returns y (b,s,h,p).  impl: 'pallas' | 'pallas_interpret' | 'ref'."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    if impl == "ref":
+        return ssd_ref(x, dt, A, Bh, Ch).astype(x.dtype)
+
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+    y_diag, states, in_decay, chunk_decay = ssd_chunk_call(
+        xc, dtc, A, Bc, Cc, interpret=(impl == "pallas_interpret"))
+
+    # inter-chunk linear recurrence (XLA): h_prev per chunk
+    def scan_fn(carry, inp):
+        st, dec = inp                                    # (b,h,n,p), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, h0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (b,nc,h,n,p)
+
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                       Cc.astype(jnp.float32), h_prev, in_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype)

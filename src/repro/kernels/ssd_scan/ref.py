@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential state-space recurrence
+(models/ssm.py:ssd_reference re-exported with the kernel's broadcast-head
+signature)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x (b,s,h,p)  dt (b,s,h)  A (h,)  B,C (b,s,h,n) — heads pre-broadcast.
+    Returns y (b,s,h,p) fp32 via the exact recurrence."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    a = jnp.exp((-jnp.exp(A))[None, None, :] * dt)        # (b,s,h)
+    xd = (x * dt[..., None]).astype(jnp.float32)
+
+    def step(hst, inp):
+        a_t, x_t, B_t, C_t = inp
+        hst = hst * a_t[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn",
+                                                       x_t, B_t)
+        y_t = jnp.einsum("bhn,bhpn->bhp", C_t, hst)
+        return hst, y_t
+
+    h0 = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (a.transpose(1, 0, 2), xd.transpose(1, 0, 2, 3),
+                          B.astype(jnp.float32).transpose(1, 0, 2, 3),
+                          C.astype(jnp.float32).transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,178 @@
+"""Dry-run cell construction: (architecture × input shape) → abstract step.
+
+A *cell* is one entry of the assignment matrix.  ``build_cell`` returns the
+step function, its abstract arguments (ShapeDtypeStructs — nothing is ever
+allocated), and in/out shardings under the given mesh, ready for
+``jax.jit(...).lower().compile()``.
+
+Shapes (assignment):
+    train_4k     seq 4096  × global_batch 256   -> train_step
+    prefill_32k  seq 32768 × global_batch 32    -> prefill_step
+    decode_32k   KV 32768  × global_batch 128   -> serve_step (1 new token)
+    long_500k    KV 524288 × global_batch 1     -> serve_step (sub-quadratic
+                                                   archs only; see skip map)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config, list_archs
+from ..configs.base import ModelConfig
+from jax.sharding import PartitionSpec as P
+
+from ..distributed.sharding import ShardingPolicy, batch_axes_for
+from ..models.model import (decode_step, init_decode_caches, init_params,
+                            prefill, train_loss)
+from ..models.transformer import MoECtx
+from ..training.optimizer import AdamWConfig, adamw_init
+from ..training.train_loop import make_train_step
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+ARCHS = [a for a in list_archs() if a != "llama2-13b"]
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    kind = SHAPES[shape]["kind"]
+    if cfg.is_encoder_only and kind == "decode":
+        return "encoder-only: no decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch: no sub-quadratic path (DESIGN §5)"
+    if shape == "train_4k" and False:
+        return None
+    return None
+
+
+def cell_matrix() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]
+
+
+def _abstract(fn, *args, **kw):
+    """eval_shape with non-array args closed over (configs, dtypes, ...)."""
+    arr_args = [a for a in args if hasattr(a, "shape") or isinstance(a, dict)
+                or isinstance(a, tuple)]
+    return jax.eval_shape(lambda *xs: fn(*_weave(args, xs), **kw), *arr_args)
+
+
+def _weave(template, arrays):
+    out, it = [], iter(arrays)
+    for a in template:
+        if hasattr(a, "shape") or isinstance(a, dict) or isinstance(a, tuple):
+            out.append(next(it))
+        else:
+            out.append(a)
+    return out
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int, with_labels: bool):
+    f = jax.ShapeDtypeStruct
+    if cfg.input_mode == "embeddings":
+        batch = {"embeddings": f((B, S, cfg.d_model), jnp.bfloat16)}
+    else:
+        batch = {"tokens": f((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = f((B, S), jnp.int32)
+    return batch
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    step_fn: Any               # callable
+    args: tuple                # abstract args
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    static_desc: dict
+
+
+def build_cell(arch: str, shape: str, mesh, *, moe_impl: str = "dropping",
+               smoke: bool = False, remat: bool = True,
+               serve_policy_overrides: Optional[dict] = None) -> Cell:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    sh = SHAPES[shape]
+    S, B, kind = sh["seq"], sh["batch"], sh["kind"]
+    if smoke:
+        S, B = 32, 4
+    baxes = batch_axes_for(mesh)
+    _pol_tmp = ShardingPolicy(mesh, "serve", cfg, batch_axes=baxes)
+    x_spec = P(_pol_tmp._batch(B), None, None)
+    moe_ctx = MoECtx(impl=moe_impl, mesh=mesh if moe_impl == "ep_a2a" else None,
+                     batch_axes=baxes, x_spec=x_spec)
+
+    if kind == "train":
+        pol = ShardingPolicy(mesh, "train", cfg, batch_axes=baxes)
+        params_s = _abstract(init_params, jax.random.PRNGKey(0), cfg,
+                             dtype=jnp.float32)
+        opt_s = _abstract(adamw_init, params_s)
+        batch = _batch_specs(cfg, B, S, with_labels=True)
+        step = make_train_step(cfg, AdamWConfig(), moe_ctx, remat=remat)
+        p_sh = pol.params_shardings(params_s)
+        opt_sh = type(opt_s)(step=pol.scalar_sharding(),
+                             m=pol.params_shardings(opt_s.m),
+                             v=pol.params_shardings(opt_s.v))
+        b_sh = pol.batch_shardings(batch)
+        metrics_sh = {"loss": pol.scalar_sharding(),
+                      "grad_norm": pol.scalar_sharding(),
+                      "lr": pol.scalar_sharding()}
+        return Cell(arch, shape, cfg, step,
+                    args=(params_s, opt_s, batch),
+                    in_shardings=(p_sh, opt_sh, b_sh),
+                    out_shardings=(p_sh, opt_sh, metrics_sh),
+                    donate_argnums=(0, 1),
+                    static_desc=dict(kind=kind, seq=S, batch=B))
+
+    pol = ShardingPolicy(mesh, "serve", cfg, batch_axes=baxes)
+    params_s = _abstract(init_params, jax.random.PRNGKey(0), cfg,
+                         dtype=jnp.bfloat16)
+    p_sh = pol.params_shardings(params_s)
+
+    if kind == "prefill":
+        batch = _batch_specs(cfg, B, S, with_labels=False)
+        b_sh = pol.batch_shardings(batch)
+
+        def prefill_step(params, batch):
+            return prefill(params, batch, cfg, moe_ctx)
+
+        out_s = _abstract(prefill_step, params_s, batch)
+        logits_sh = pol.logits_sharding(out_s[0].shape)
+        caches_sh = (pol.cache_shardings(out_s[1])
+                     if out_s[1] is not None else None)
+        return Cell(arch, shape, cfg, prefill_step,
+                    args=(params_s, batch),
+                    in_shardings=(p_sh, b_sh),
+                    out_shardings=(logits_sh, caches_sh),
+                    donate_argnums=(),
+                    static_desc=dict(kind=kind, seq=S, batch=B))
+
+    # decode
+    caches_s = _abstract(init_decode_caches, cfg, B, S, dtype=jnp.bfloat16)
+    c_sh = pol.cache_shardings(caches_s)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = pol.batch_shardings(tokens)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, tokens, caches, cache_pos):
+        return decode_step(params, tokens, caches, cache_pos, cfg, moe_ctx)
+
+    out_s = _abstract(serve_step, params_s, tokens, caches_s, pos)
+    logits_sh = pol.logits_sharding(out_s[0].shape)
+    return Cell(arch, shape, cfg, serve_step,
+                args=(params_s, tokens, caches_s, pos),
+                in_shardings=(p_sh, tok_sh, c_sh, pol.scalar_sharding()),
+                out_shardings=(logits_sh, c_sh),
+                donate_argnums=(2,),
+                static_desc=dict(kind=kind, seq=S, batch=B))

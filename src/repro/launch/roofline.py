@@ -1,0 +1,125 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch × shape) on the single-pod mesh (multi-pod cells prove the pod
+axis shards; per-chip terms are mesh-invariant up to the pod all-reduce):
+
+    compute term    = HLO_FLOPs_per_chip    / 197 TFLOP/s        (bf16 peak)
+    memory term     = HLO_traffic_per_chip  / 819 GB/s           (HBM)
+    collective term = collective_bytes_per_chip / 50 GB/s        (ICI link)
+
+HLO terms are the *loop-corrected* values from launch/hlo_analysis.py
+(XLA's cost_analysis counts while bodies once; see that module).  The
+dominant term is the step-time lower bound; "MFU@bound" is the fraction of
+peak the chip would reach at that bound doing only MODEL_FLOPS-useful work:
+
+    MFU@bound = (MODEL_FLOPS / chips / peak) / max(terms)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--variant base] [--json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "launch_out" / "dryrun"
+
+
+def _remark(row: dict) -> str:
+    kind = row["desc"]["kind"]
+    dom = row["dominant"]
+    if dom == "collective":
+        return ("overlap/shrink collectives: reduce-scatter grads, "
+                "fuse all-gathers with matmuls, EP a2a instead of gathers")
+    if dom == "memory":
+        if kind == "decode":
+            return ("decode is weight/KV streaming-bound: grow batch, "
+                    "quantize KV, MLA-style latent cache")
+        return ("cut HBM traffic: larger fusion regions, fewer remat "
+                "passes, bf16 stash")
+    if kind == "train":
+        return "raise matmul efficiency: bigger per-chip tiles, less remat"
+    return "compute-bound: kernel quality (flash tiles), skip masked blocks"
+
+
+def load_cells(variant: str = "base", mesh: str = "pod_16x16") -> list[dict]:
+    rows = []
+    for fn in sorted(OUT_DIR.glob(f"*__{mesh}__{variant}.json")):
+        r = json.loads(fn.read_text())
+        rows.append(r)
+    return rows
+
+
+def roofline_terms(row: dict) -> dict | None:
+    if row.get("status") != "ok" or "hlo_corrected" not in row:
+        return None
+    hc = row["hlo_corrected"]
+    t_comp = hc["flops"] / PEAK
+    t_mem = hc["traffic_bytes"] / HBM
+    t_coll = hc["collective_bytes"] / ICI
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    model_t = row["model_flops"] / CHIPS / PEAK
+    bound = max(terms.values())
+    out = dict(row)
+    out.update({
+        "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+        "dominant": dom, "bound_s": bound,
+        "mfu_at_bound": model_t / bound if bound > 0 else 0.0,
+        "useful_flops_ratio": row["model_flops"] / max(hc["flops"] * CHIPS, 1),
+    })
+    out["remark"] = _remark(out)
+    return out
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | MFU@bound | useful/HLO | HBM GB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['reason'][:40]} | — | — | — |")
+            continue
+        t = roofline_terms(r)
+        if t is None:
+            lines.append(f"| {r['arch']} | {r['shape']} | ? | ? | ? | "
+                         f"{r.get('status')} | ? | ? | ? |")
+            continue
+        mem_gb = (r["memory"].get("argument_bytes", 0)
+                  + r["memory"].get("temp_bytes", 0)) / 1e9
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['t_compute']*1e3:.1f} "
+            f"| {t['t_memory']*1e3:.1f} | {t['t_collective']*1e3:.1f} "
+            f"| **{t['dominant']}** | {t['mfu_at_bound']*100:.1f}% "
+            f"| {t['useful_flops_ratio']*100:.0f}% | {mem_gb:.1f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--mesh", default="pod_16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = load_cells(args.variant, args.mesh)
+    if args.json:
+        out = []
+        for r in rows:
+            t = roofline_terms(r)
+            out.append(t if t else r)
+        print(json.dumps(out, indent=1, default=str))
+        return
+    print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

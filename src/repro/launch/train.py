@@ -1,0 +1,76 @@
+"""Training launcher: real training on the host devices (CPU here, TPU mesh
+in production via --production flags) with checkpoint/restart.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from ..configs import get_config, get_smoke_config
+from ..models.transformer import MoECtx
+from ..training import (AdamWConfig, DataConfig, TokenDataset,
+                        init_train_state, make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (production) config instead of smoke")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = (get_config(args.arch) if args.full_config
+           else get_smoke_config(args.arch))
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=10,
+                          total_steps=args.steps)
+    moe_ctx = MoECtx(impl="dropping" if cfg.n_experts else "dense")
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, moe_ctx, remat=True))
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg)
+
+    start = 0
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start, _ = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        print(f"resumed from step {start}")
+
+    ds = TokenDataset(cfg, DataConfig(global_batch=args.batch,
+                                      seq_len=args.seq))
+    it = ds.batches()
+    # fast-forward the stream for bitwise resume equivalence
+    for _ in range(start):
+        next(it)
+
+    t0 = time.time()
+    for step in range(start + 1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps:
+            print(f"step {step:5d}  loss={float(metrics['loss']):.4f}  "
+                  f"gnorm={float(metrics['grad_norm']):.3f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"({(time.time()-t0)/max(step-start,1)*1000:.0f} ms/step)",
+                  flush=True)
+        if args.ckpt_dir and (step % args.ckpt_every == 0
+                              or step == args.steps):
+            save_checkpoint(args.ckpt_dir, step, (params, opt_state))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

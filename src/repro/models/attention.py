@@ -1,0 +1,348 @@
+"""Attention variants for the assigned architectures.
+
+* GQA/MHA/MQA with RoPE — qwen3 (qk_norm), phi3.5, gemma3, h2o-danube (SWA),
+  internvl2, hubert (bidirectional), recurrentgemma (MQA local).
+* MLA (multi-head latent attention) — deepseek-v2-lite, minicpm3.  The KV
+  cache holds the compressed latent (r + rope_dim per token); decode uses the
+  *absorbed* formulation (q projected through W_uk so scores hit the latent
+  directly) — the memory-bandwidth win MLA exists for.
+
+All softmax math in fp32 (DtypePolicy.accum); everything else in the compute
+dtype.  Shapes: x (B, S, d); caches are contiguous (B, S_max, ...) — the
+paged path lives in serving/kv_cache.py + kernels/paged_attention.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+# §Perf flag (EXPERIMENTS.md): K/V of prefill attention are born sharded on
+# the flattened K·hd dim (column-sharded wk/wv); every blockwise q-block
+# then re-gathers them — 36 layers x 64 blocks = 1.3 TB/chip of all-gathers
+# at 32k.  Constraining K/V replicated-over-model (batch stays sharded)
+# gathers them ONCE per layer; q stays head-sharded, scores/outputs stay
+# distributed.  kv_heads <= TP for every assigned arch, so no memory cost
+# beyond the vanilla TP-attention layout.
+_OPT_KV_REPLICATE = os.environ.get("REPRO_BLOCKWISE_OPT", "0") == "1"
+
+from ..configs.base import ModelConfig
+from .common import DtypePolicy, apply_rope, attention_mask, dense_init, rms_norm
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        r, rd, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim
+        p = {
+            "wq": dense_init(ks[0], d, H * (hd + rd), dtype),
+            "w_dkv": dense_init(ks[1], d, r, dtype),
+            "w_krope": dense_init(ks[2], d, rd, dtype),
+            "w_uk": dense_init(ks[3], r, H * hd, dtype),
+            "w_uv": dense_init(ks[4], r, H * vd, dtype),
+            "wo": dense_init(ks[5], H * vd, d, dtype),
+            "kv_norm": jnp.zeros((r,), dtype=dtype),
+        }
+    else:
+        p = {
+            "wq": dense_init(ks[0], d, H * hd, dtype),
+            "wk": dense_init(ks[1], d, K * hd, dtype),
+            "wv": dense_init(ks[2], d, K * hd, dtype),
+            "wo": dense_init(ks[3], H * hd, d, dtype),
+        }
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.zeros((hd,), dtype=dtype)
+            p["k_norm"] = jnp.zeros((hd,), dtype=dtype)
+    return p
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    """Shape (as jax.ShapeDtypeStruct-compatible tuples) of one layer's
+    decode cache."""
+    if cfg.use_mla:
+        return {"latent": ((batch, s_max, cfg.kv_lora_rank), dtype),
+                "k_rope": ((batch, s_max, cfg.rope_head_dim), dtype)}
+    return {"k": ((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": ((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+
+# --------------------------------------------------------------------------
+# GQA path
+# --------------------------------------------------------------------------
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, K, hd)
+    v = (x @ params["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(q, k, v, mask):
+    """q (B,S,H,hd), k/v (B,T,K,hd), mask (S,T) or (B,1,1,S,T)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) * scale
+    scores = scores.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H * hd)
+
+
+BLOCKWISE_THRESHOLD = 2048     # use blockwise attention when S exceeds this
+
+
+def gqa_forward(params, x, cfg: ModelConfig, *, window: int,
+                positions, causal: bool = True, return_kv: bool = False):
+    """Full-sequence attention (train / prefill)."""
+    from .blockwise import blockwise_gqa_attend
+    q, k, v = _qkv(params, x, cfg, positions)
+    S = x.shape[1]
+    if S > BLOCKWISE_THRESHOLD:
+        if _OPT_KV_REPLICATE:
+            from jax.sharding import PartitionSpec as P
+            U = P.UNCONSTRAINED
+            k = jax.lax.with_sharding_constraint(k, P(U, None, None, None))
+            v = jax.lax.with_sharding_constraint(v, P(U, None, None, None))
+        out = blockwise_gqa_attend(q, k, v, causal=causal, window=window)
+    else:
+        mask = attention_mask(S, S, causal=causal, window=window)
+        out = gqa_attend(q, k, v, mask)
+    y = out @ params["wo"]
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def _pos_vec(cache_pos, B):
+    """Normalize cache_pos: scalar (dry-run serve_step) or (B,) per-row
+    (slot-based engine, sequences at different lengths)."""
+    p = jnp.asarray(cache_pos, dtype=jnp.int32)
+    scalar = p.ndim == 0
+    return (jnp.full((B,), p, jnp.int32) if scalar else p), scalar
+
+
+def _cache_write(cache_t, new_t, cache_pos, scalar):
+    """Write new_t (B,1,...) into cache_t (B,S,...) at per-row positions.
+    Scalar positions use dynamic_update_slice (cheaper HLO for the
+    dry-run); vectors use a row scatter."""
+    if scalar:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache_t, new_t.astype(cache_t.dtype),
+            jnp.asarray(cache_pos, jnp.int32).reshape(()), axis=1)
+    B = cache_t.shape[0]
+    return cache_t.at[jnp.arange(B), cache_pos].set(
+        new_t[:, 0].astype(cache_t.dtype), mode="drop")
+
+
+def gqa_decode(params, x, cache: dict, cache_pos, cfg: ModelConfig,
+               *, window: int):
+    """Single-token decode.  x (B,1,d); cache k/v (B,S_max,K,hd);
+    cache_pos: scalar int or (B,) vector — tokens already in each cache."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    posv, scalar = _pos_vec(cache_pos, B)
+    pos = posv[:, None]
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+    k_new = (x @ params["wk"]).reshape(B, 1, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    k = _cache_write(cache["k"], k_new, cache_pos if scalar else posv, scalar)
+    v = _cache_write(cache["v"], v_new, cache_pos if scalar else posv, scalar)
+    T = k.shape[1]
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    mask = k_pos <= posv[:, None]                       # (B,T) causal
+    if window and window > 0:
+        mask &= k_pos > (posv[:, None] - window)
+    out = gqa_attend(q, k, v, mask[:, None, None, None, :])
+    y = out @ params["wo"]
+    return y, {"k": k, "v": v}
+
+
+def gqa_decode_ring(params, x, cache: dict, cache_pos, cfg: ModelConfig,
+                    *, window: int):
+    """Single-token decode with a *ring-buffer* window cache — the memory
+    win that makes SWA/local layers O(window) instead of O(seq) in the
+    long_500k cell.  cache k/v: (B, W, K, hd), slot = abs_pos % W, keys are
+    stored post-RoPE so no re-rotation is needed."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    W = cache["k"].shape[1]
+    posv, scalar = _pos_vec(cache_pos, B)
+    pos = posv[:, None]
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+    k_new = (x @ params["wk"]).reshape(B, 1, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    slot = jnp.mod(posv, W)
+    k = _cache_write(cache["k"], k_new, jnp.mod(cache_pos, W) if scalar
+                     else slot, scalar)
+    v = _cache_write(cache["v"], v_new, jnp.mod(cache_pos, W) if scalar
+                     else slot, scalar)
+    # slot s holds absolute position pos - ((pos - s) mod W); valid if >= 0.
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    abs_pos = pos - jnp.mod(pos - s_idx, W)                 # (B, W)
+    mask = abs_pos >= 0
+    out = gqa_attend(q, k, v, mask[:, None, None, None, :])
+    y = out @ params["wo"]
+    return y, {"k": k, "v": v}
+
+
+def ring_cache_from_prefill(kv: dict, window: int) -> dict:
+    """Convert full prefill k/v (B, S, K, hd) into ring-buffer layout."""
+    out = {}
+    for name in ("k", "v"):
+        t = kv[name]
+        S = t.shape[1]
+        W = min(window, S) if window else S
+        last = t[:, S - W:, :, :]
+        shift = (S - W) % W if W else 0
+        out[name] = jnp.roll(last, shift=shift, axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# MLA path
+# --------------------------------------------------------------------------
+
+def mla_forward(params, x, cfg: ModelConfig, *, positions,
+                causal: bool = True, window: int = 0, return_kv: bool = False):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    r, rd, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    c = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    k_rope = (x @ params["w_krope"]).reshape(B, S, 1, rd)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_nope = (c @ params["w_uk"]).reshape(B, S, H, hd)
+    v = (c @ params["w_uv"]).reshape(B, S, H, vd)
+    scale = (hd + rd) ** -0.5
+    if S > BLOCKWISE_THRESHOLD:
+        # Fold MLA into MHA form (q/k = [nope ‖ rope]) and reuse the
+        # blockwise online-softmax path.
+        from .blockwise import blockwise_gqa_attend
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], axis=-1)
+        if _OPT_KV_REPLICATE:
+            from jax.sharding import PartitionSpec as P
+            U = P.UNCONSTRAINED
+            k_full = jax.lax.with_sharding_constraint(
+                k_full, P(U, None, None, None))
+            v = jax.lax.with_sharding_constraint(v, P(U, None, None, None))
+        out = blockwise_gqa_attend(q_full, k_full, v, causal=causal,
+                                   window=window, scale=scale)
+    else:
+        scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+                  + jnp.einsum("bshd,btzd->bhst", q_rope,
+                               k_rope)) * scale
+        mask = attention_mask(S, S, causal=causal, window=window)
+        scores = jnp.where(mask, scores.astype(jnp.float32),
+                           jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, H * vd)
+    y = out @ params["wo"]
+    if return_kv:
+        return y, {"latent": c, "k_rope": k_rope[:, :, 0, :]}
+    return y
+
+
+def mla_decode(params, x, cache: dict, cache_pos, cfg: ModelConfig,
+               *, window: int = 0):
+    """Absorbed-MLA decode: scores hit the cached latent directly —
+    q_eff = q_nope @ W_uk (per head) → (B,H,r); attention over latent (B,T,r);
+    output = (probs @ latent) @ W_uv.  KV traffic = r + rd per token instead
+    of 2·H·hd — the MLA serving win."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    r, rd, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim
+    posv, scalar = _pos_vec(cache_pos, B)
+    pos = posv[:, None]
+    q = (x @ params["wq"]).reshape(B, 1, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)[:, 0]     # (B,H,rd)
+    c_new = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope((x @ params["w_krope"]).reshape(B, 1, 1, rd),
+                            pos, cfg.rope_theta)[:, 0, 0]      # (B,rd)
+    latent = _cache_write(cache["latent"], c_new,
+                          cache_pos if scalar else posv, scalar)
+    k_rope = _cache_write(cache["k_rope"], k_rope_new[:, None, :],
+                          cache_pos if scalar else posv, scalar)
+    # absorb: q_eff[b,h,r] = q_nope[b,h,:] @ W_uk[:, h, :]  (W_uk: (r, H, hd))
+    w_uk = params["w_uk"].reshape(r, H, hd)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = (hd + rd) ** -0.5
+    scores = (jnp.einsum("bhr,btr->bht", q_eff, latent)
+              + jnp.einsum("bhd,btd->bht", q_rope, k_rope)) * scale
+    T = latent.shape[1]
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    mask = k_pos <= posv[:, None]                              # (B,T)
+    if window and window > 0:
+        mask &= k_pos > (posv[:, None] - window)
+    scores = jnp.where(mask[:, None, :], scores.astype(jnp.float32),
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(latent.dtype)
+    ctx = jnp.einsum("bht,btr->bhr", probs, latent)            # (B,H,r)
+    w_uv = params["w_uv"].reshape(r, H, vd)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(B, 1, H * vd)
+    y = out @ params["wo"]
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+# --------------------------------------------------------------------------
+# dispatch by config
+# --------------------------------------------------------------------------
+
+def window_for(cfg: ModelConfig, kind: str) -> int:
+    if kind == "local":
+        return cfg.window
+    if kind == "global":
+        return 0
+    if cfg.attn_kind == "swa":
+        return cfg.window
+    return 0
+
+
+def attn_forward(params, x, cfg: ModelConfig, kind: str, positions,
+                 return_kv: bool = False):
+    w = window_for(cfg, kind)
+    if cfg.use_mla:
+        return mla_forward(params, x, cfg, positions=positions,
+                           causal=cfg.causal, window=w, return_kv=return_kv)
+    return gqa_forward(params, x, cfg, window=w, positions=positions,
+                       causal=cfg.causal, return_kv=return_kv)
+
+
+def attn_decode(params, x, cache, cache_pos, cfg: ModelConfig, kind: str):
+    w = window_for(cfg, kind)
+    if cfg.use_mla:
+        return mla_decode(params, x, cache, cache_pos, cfg, window=w)
+    return gqa_decode(params, x, cache, cache_pos, cfg, window=w)

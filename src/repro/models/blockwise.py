@@ -1,0 +1,171 @@
+"""Blockwise (memory-efficient / FlashAttention-algorithm) attention in XLA.
+
+The plain jnp path materializes (B,H,S,T) scores — 34 GB/layer at train_4k
+and petabytes at prefill_32k.  This module expresses the online-softmax
+block algorithm with lax.scan so the working set is O(block_q × span):
+
+  * outer scan over query blocks,
+  * per q-block, a *banded* KV slice [qpos+bq-span, qpos+bq) — for windowed
+    attention the span is window+bq (local/SWA layers never touch the full
+    sequence); for full causal attention the span is the whole prefix
+    (upper-triangle blocks are masked, costing ≤2× attention FLOPs — the
+    Pallas kernel on real TPU skips them; recorded in §Roofline).
+  * inner scan over KV blocks with the (m, l, acc) online-softmax carry.
+
+This is the prefill/train attention used by every arch when S ≥ the
+blockwise threshold; decode keeps the single-token einsum path.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+# §Perf hillclimb flags (default off = recorded baseline; EXPERIMENTS.md):
+#   REPRO_BLOCKWISE_OPT=1    skip the identity dynamic_slice when span == T —
+#       a traced-offset slice over the sequence-sharded KV forces GSPMD into
+#       involuntary full rematerialization (1.24 TB of all-gathers per
+#       prefill step on qwen3-32k).
+#   REPRO_BLOCKWISE_BF16=1   materialize attention scores in bf16 (the f32
+#       score/prob blocks dominate train_4k HBM traffic; flash kernels never
+#       materialize them at all).
+_OPT_SLICE = os.environ.get("REPRO_BLOCKWISE_OPT", "0") == "1"
+_BF16_SCORES = os.environ.get("REPRO_BLOCKWISE_BF16", "0") == "1"
+
+
+def blockwise_gqa_attend(q, k, v, *, causal: bool, window: int = 0,
+                         q_offset: int = 0, block_q: int = 512,
+                         block_kv: int = 1024, scale: float | None = None):
+    """q (B,S,H,hd); k/v (B,T,K,hd) with H = K·G.  Returns (B,S,H,hd).
+
+    window > 0 bounds attention to the last ``window`` positions (SWA /
+    local layers); 0 means unbounded.  ``q_offset`` is the absolute position
+    of q[0] (chunked prefill)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    G = H // K
+    scale = hd ** -0.5 if scale is None else scale
+
+    block_q = min(block_q, S)
+    while S % block_q:
+        block_q //= 2
+    nq = S // block_q
+
+    # Span of KV needed by one q block.
+    if causal and window and window > 0:
+        span = window + block_q
+    elif causal:
+        span = T
+    else:
+        span = T
+    span = min(span, T)
+    block_kv = min(block_kv, span)
+    while span % block_kv:
+        block_kv //= 2
+    nkv = span // block_kv
+
+    qb = q.reshape(B, nq, block_q, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # qb: (nq, B, K, G, bq, hd)
+
+    def q_block_fn(_, args):
+        qi, idx = args
+        # absolute q positions for this block
+        q_start = q_offset + idx * block_q
+        # KV slice start: last `span` positions ending at q_start+block_q
+        if span == T:
+            kv_start = jnp.int32(0)
+            if _OPT_SLICE:
+                k_sl, v_sl = k, v      # identity slice: keep KV sharded
+            else:
+                k_sl = jax.lax.dynamic_slice(k, (0, kv_start, 0, 0),
+                                             (B, span, K, hd))
+                v_sl = jax.lax.dynamic_slice(v, (0, kv_start, 0, 0),
+                                             (B, span, K, vd))
+        else:
+            kv_start = jnp.clip(q_start + block_q - span, 0, T - span)
+            k_sl = jax.lax.dynamic_slice(k, (0, kv_start, 0, 0),
+                                         (B, span, K, hd))
+            v_sl = jax.lax.dynamic_slice(v, (0, kv_start, 0, 0),
+                                         (B, span, K, vd))
+        k_sl = k_sl.reshape(B, nkv, block_kv, K, hd).transpose(1, 0, 3, 2, 4)
+        v_sl = v_sl.reshape(B, nkv, block_kv, K, vd).transpose(1, 0, 3, 2, 4)
+        # (nkv, B, K, bkv, hd)
+
+        m0 = jnp.full((B, K, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, K, G, block_q, vd), jnp.float32)
+
+        def kv_block_fn(carry, args2):
+            m, l, acc = carry
+            kj, vj, jdx = args2
+            scores = jnp.einsum(
+                "bkgqh,bkth->bkgqt", qi, kj,
+                preferred_element_type=(jnp.bfloat16 if _BF16_SCORES
+                                        else jnp.float32)) * scale
+            scores = scores.astype(jnp.float32)
+            q_pos = (q_start
+                     + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_kv), 0))
+            k_pos = (kv_start + jdx * block_kv
+                     + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_kv), 1))
+            mask = jnp.ones((block_q, block_kv), jnp.bool_)
+            if causal:
+                mask &= k_pos <= q_pos
+            if window and window > 0:
+                mask &= k_pos > q_pos - window
+            scores = jnp.where(mask, scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(-1))
+            # guard fully-masked rows
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            p = jnp.where(mask, p, 0.0)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,bkth->bkgqh", p.astype(vj.dtype), vj).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_block_fn,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            (m0, l0, a0),
+            (k_sl, v_sl, jnp.arange(nkv, dtype=jnp.int32)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)                 # (B,K,G,bq,hd)
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_block_fn,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        None, (qb, jnp.arange(nq, dtype=jnp.int32)))
+    # outs: (nq, B, K, G, bq, hd) -> (B, S, H, hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H * vd)
+    return out
+
+
+def reference_attend(q, k, v, *, causal: bool, window: int = 0,
+                     q_offset: int = 0):
+    """Dense oracle for tests (same GQA semantics)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) * hd ** -0.5
+    q_pos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    mask = jnp.ones((S, T), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows -> 0
+    probs = jnp.where(mask.any(-1)[None, None, None], probs, 0.0)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H * hd)

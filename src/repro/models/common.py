@@ -1,0 +1,169 @@
+"""Common model building blocks: norms, RoPE, initializers, dtype policy.
+
+Pure-functional JAX: parameters are nested dicts of jnp arrays; every layer
+is (init_fn, apply_fn).  No flax/optax dependency (not available offline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DtypePolicy:
+    params: jnp.dtype = jnp.float32
+    compute: jnp.dtype = jnp.bfloat16
+    accum: jnp.dtype = jnp.float32
+
+    @staticmethod
+    def train() -> "DtypePolicy":
+        return DtypePolicy(jnp.float32, jnp.bfloat16, jnp.float32)
+
+    @staticmethod
+    def serve() -> "DtypePolicy":
+        return DtypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with a custom VJP that keeps the saved residual in the input
+    dtype (bf16).  Without this, XLA materializes an f32 copy of every
+    rematerialized layer input (the backward recompute consumes f32),
+    doubling the activation stash of the layer scan — 36 GB/device at
+    train_4k on qwen3 (EXPERIMENTS.md §Perf)."""
+    return _rms_norm_fwd(x, scale, eps)[0]
+
+
+def _rms_impl(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (xf * inv * (1.0 + scale.astype(jnp.float32))).astype(x.dtype), inv
+
+
+def _rms_norm_fwd(x, scale, eps):
+    y, _ = _rms_impl(x, scale, eps)
+    return y, (x, scale)
+
+
+def _rms_norm_bwd(eps, res, g):
+    x, scale = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    d = x.shape[-1]
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    s1 = (1.0 + scale.astype(jnp.float32))
+    xhat = xf * inv
+    g_scaled = gf * s1
+    dx = inv * (g_scaled - xhat * jnp.mean(g_scaled * xhat, axis=-1,
+                                           keepdims=True))
+    dscale = jnp.sum(gf * xhat, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd)  positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Masks (built lazily from iota — O(S·T) bools, no host transfer)
+# --------------------------------------------------------------------------
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool,
+                   window: int = 0, q_offset=0) -> jnp.ndarray:
+    """(q_len, kv_len) bool mask. ``q_offset`` — absolute position of the
+    first query (decode: q_offset = cache position). window=0 → unbounded."""
+    q_pos = jax.lax.broadcasted_iota(jnp.int32, (q_len, kv_len), 0) + q_offset
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (q_len, kv_len), 1)
+    m = jnp.ones((q_len, kv_len), dtype=jnp.bool_)
+    if causal:
+        m = m & (k_pos <= q_pos)
+    if window and window > 0:
+        m = m & (k_pos > q_pos - window)
+    return m
+
+
+def softmax_attend(scores: jnp.ndarray, v: jnp.ndarray, mask: jnp.ndarray,
+                   einsum_str: str) -> jnp.ndarray:
+    """fp32 masked softmax over the last axis of ``scores`` then attend."""
+    scores = scores.astype(jnp.float32)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(einsum_str, probs.astype(v.dtype), v)
+
+
+def take_embedding(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup via one-hot matmul when the table is sharded on
+    vocab (TPU-friendly: becomes a sharded matmul + psum instead of a
+    gather across shards), plain take otherwise — XLA picks with GSPMD."""
+    return jnp.take(table, ids, axis=0)
+
+
+def causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over time via shifted adds.
+    x: (B, S, D); w: (W, D) with w[-1] multiplying the current step."""
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :][:, :x.shape[1], :]
+        out = out + shifted * w[W - 1 - i]
+    return out
+
+
+def conv_decode_step(x_t: jnp.ndarray, conv_state: jnp.ndarray,
+                     w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step of the causal depthwise conv.
+    x_t: (B, D); conv_state: (B, W-1, D) past inputs (oldest first)."""
+    W = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, W, D)
+    y = jnp.einsum("bwd,wd->bd", full, w)
+    new_state = full[:, 1:, :]
+    return y, new_state

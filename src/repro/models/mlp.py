@@ -1,0 +1,27 @@
+"""MLP blocks: SwiGLU (decoder LMs) and GeLU (encoder-only, hubert-style)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import dense_init
+
+
+def init_mlp(key, d: int, ff: int, dtype, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {"w_gate": dense_init(ks[0], d, ff, dtype),
+                "w_up": dense_init(ks[1], d, ff, dtype),
+                "w_down": dense_init(ks[2], ff, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, ff, dtype),
+            "w_down": dense_init(ks[1], ff, d, dtype)}
+
+
+def mlp_forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]

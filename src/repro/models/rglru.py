@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+    r_t = σ(W_a u_t + b_a)            recurrence gate
+    i_t = σ(W_x u_t + b_x)            input gate
+    a_t = exp(−c · softplus(Λ) · r_t) (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+The block wraps the RG-LRU in the Griffin recurrent layer: two input
+branches (GeLU gate + conv→RG-LRU), elementwise product, output projection.
+Training uses an associative scan over the sequence (log-depth linear
+recurrence); decode carries (h, conv) state — O(1) per token, which is why
+recurrentgemma runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import causal_depthwise_conv, conv_decode_step, dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_in": dense_init(ks[0], d, w, dtype),
+        "w_x_in": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w),
+                                     dtype=jnp.float32) * 0.2).astype(dtype),
+        "w_a": dense_init(ks[3], w, w, dtype),
+        "b_a": jnp.zeros((w,), dtype=jnp.float32),
+        "w_i": dense_init(ks[4], w, w, dtype),
+        "b_i": jnp.zeros((w,), dtype=jnp.float32),
+        "lam": jnp.full((w,), 0.5, dtype=jnp.float32),       # Λ
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid((u @ params["w_a"]).astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid((u @ params["w_i"]).astype(jnp.float32) + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r          # (..., w) fp32
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = scale * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence Griffin recurrent block. x (B,S,d)."""
+    gate = jax.nn.gelu(x @ params["w_gate_in"])
+    u = x @ params["w_x_in"]
+    u_conv = jax.nn.silu(causal_depthwise_conv(u, params["conv_w"]))
+    a, b = _gates(params, u_conv)                             # (B,S,w) fp32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    y = (h * gate) @ params["w_out"]
+    if return_state:
+        W = cfg.conv_width
+        tail = u[:, -(W - 1):, :]
+        pad = (W - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return y, {"h": h[:, -1, :].astype(jnp.float32), "conv": tail}
+    return y
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    w = cfg.rnn_width
+    return {"h": jnp.zeros((batch, w), dtype=jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype=dtype)}
+
+
+def rglru_decode(params, x, cache: dict, cfg: ModelConfig):
+    """One decode step. x (B,1,d)."""
+    x0 = x[:, 0, :]
+    gate = jax.nn.gelu(x0 @ params["w_gate_in"])
+    u = x0 @ params["w_x_in"]
+    u_c, conv_state = conv_decode_step(u, cache["conv"].astype(u.dtype),
+                                       params["conv_w"])
+    u_c = jax.nn.silu(u_c)
+    a, b = _gates(params, u_c)                                # (B,w)
+    h = a * cache["h"] + b
+    y = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None, :]
+    return y, {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

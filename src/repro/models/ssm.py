@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD — state-space duality) mixer block [arXiv:2405.21060].
+
+Train/prefill use the chunked SSD algorithm: the sequence is split into
+chunks of Q tokens; within a chunk the computation is a (masked, decayed)
+quadratic attention-like product; across chunks a linear recurrence carries
+the (H, hd, N) state.  Decode is the pure recurrence (one step, O(1) in
+sequence length — why mamba2 is eligible for the long_500k cell).
+
+Layout follows the reference minimal-mamba2:
+    x  (B, S, H, P)   — P = ssm_head_dim, H = d_inner / P heads
+    dt (B, S, H)      — softplus-positive step sizes
+    A  (H,)           — negative decay rates (log-parameterized)
+    B, C (B, S, G, N) — input/output projections (G groups, shared over heads)
+
+The intra-chunk einsums are the compute hot-spot mirrored by the Pallas
+kernel in kernels/ssd_scan/ (kernel validated against ssd_reference here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import causal_depthwise_conv, conv_decode_step, dense_init, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                     dtype=jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "norm": jnp.zeros((di,), dtype=dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j<t<=i} a[..., t] (−inf j>i).
+    a: (..., Q) → (..., Q, Q)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # i minus j
+    i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h_init=None):
+    """Chunked SSD scan.
+    x (b,s,h,p)  dt (b,s,h)  A (h,)  B,C (b,s,g,n); returns y (b,s,h,p),
+    final state (b,h,p,n)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    rep = h // g
+    # broadcast groups over heads
+    Bh = jnp.repeat(B, rep, axis=2)                          # (b,s,h,n)
+    Ch = jnp.repeat(C, rep, axis=2)
+    xa = (x * dt[..., None]).astype(jnp.float32)             # dt-weighted input
+    a = (-jnp.exp(A))[None, None, :] * dt                    # (b,s,h) log-decay
+    # chunk views
+    def ch(t):  # (b,s,...) -> (b,nc,chunk,...)
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+    xc, ac = ch(xa), ch(a)
+    Bc, Cc = ch(Bh.astype(jnp.float32)), ch(Ch.astype(jnp.float32))
+    ac_t = ac.transpose(0, 3, 1, 2) if False else ac         # keep (b,nc,q,h)
+    # ---- intra-chunk (the Pallas-kernel hot spot) ----
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))           # (b,nc,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)        # (b,nc,h,q,q)
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L, xc)
+    # ---- chunk states ----
+    cum = jnp.cumsum(ac, axis=2)                             # (b,nc,q,h)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bc, decay_to_end, xc)                # (b,nc,h,p,n)
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,h)
+    if h_init is None:
+        h_init = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                        # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                    # emit state BEFORE chunk
+
+    _, h_prev = jax.lax.scan(
+        scan_fn, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (b,nc,h,p,n)
+    final = h_init * jnp.prod(chunk_decay, axis=1)[:, :, None, None] \
+        if False else None
+    # recompute final state properly: run scan once more for the last carry
+    def scan_fn2(carry, inp):
+        st, dec = inp
+        return carry * dec[:, :, None, None] + st, None
+    h_final, _ = jax.lax.scan(
+        scan_fn2, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    # ---- inter-chunk output ----
+    in_decay = jnp.exp(cum)                                  # (b,nc,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc, h_prev, in_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, dt, A, B, C):
+    """O(S²)-free pure recurrence oracle (slow; tests/kernels only)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    a = jnp.exp((-jnp.exp(A))[None, None, :] * dt)           # (b,s,h)
+    xa = (x * dt[..., None]).astype(jnp.float32)
+
+    def step(hst, inp):
+        a_t, x_t, B_t, C_t = inp
+        hst = hst * a_t[:, :, None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t, B_t)
+        y_t = jnp.einsum("bhn,bhpn->bhp", C_t, hst)
+        return hst, y_t
+
+    h0 = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (a.transpose(1, 0, 2), xa.transpose(1, 0, 2, 3),
+                          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def _split_in_proj(params, xz, cfg: ModelConfig):
+    di, H = cfg.d_inner, cfg.n_ssm_heads
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    z = xz[..., :di]
+    xBC = xz[..., di: 2 * di + 2 * G * N]
+    dt_raw = xz[..., 2 * di + 2 * G * N:]
+    return z, xBC, dt_raw
+
+
+def ssm_forward(params, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence mamba2 mixer (train / prefill)."""
+    B_, S, d = x.shape
+    di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    xz = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_in_proj(params, xz, cfg)
+    xBC = jax.nn.silu(causal_depthwise_conv(xBC, params["conv_w"]))
+    xs = xBC[..., :di].reshape(B_, S, H, P)
+    Bm = xBC[..., di:di + G * N].reshape(B_, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                # (B,S,H)
+    y, h_final = ssd_chunked(xs, dt, params["A_log"], Bm, Cm,
+                             min(cfg.ssm_chunk, S))
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, di) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        conv_tail = _conv_tail(xz, params, cfg)
+        return out, {"ssm": h_final.astype(jnp.float32), "conv": conv_tail}
+    return out
+
+
+def _conv_tail(xz, params, cfg):
+    """Last (W-1) pre-conv inputs — the decode conv state after prefill."""
+    di, G, N = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    xBC_pre = xz[..., di: 2 * di + 2 * G * N]
+    W = cfg.conv_width
+    tail = xBC_pre[:, -(W - 1):, :]
+    pad = (W - 1) - tail.shape[1]
+    if pad > 0:                              # prompt shorter than conv window
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return tail
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * G * N),
+                          dtype=dtype),
+    }
+
+
+def ssm_decode(params, x, cache: dict, cfg: ModelConfig):
+    """One decode step.  x (B,1,d) → (y (B,1,d), new cache)."""
+    B_ = x.shape[0]
+    di, H, P = cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    xz = x[:, 0, :] @ params["in_proj"]                      # (B, ...)
+    z = xz[..., :di]
+    xBC_pre = xz[..., di: 2 * di + 2 * G * N]
+    dt_raw = xz[..., 2 * di + 2 * G * N:]
+    xBC, conv_state = conv_decode_step(xBC_pre, cache["conv"].astype(xz.dtype),
+                                       params["conv_w"])
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :di].reshape(B_, H, P)
+    Bm = xBC[..., di:di + G * N].reshape(B_, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp((-jnp.exp(params["A_log"]))[None, :] * dt)   # (B,H)
+    xa = (xs * dt[..., None]).astype(jnp.float32)
+    h = cache["ssm"] * a[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", xa, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y.astype(x.dtype) + xs * params["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B_, di) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"ssm": h, "conv": conv_state.astype(cache["conv"].dtype)}

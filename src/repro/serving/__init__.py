@@ -1,0 +1,9 @@
+"""Serving substrate: paged KV pool, slot-based continuous-batching engine,
+sampler (DESIGN.md §2)."""
+from .api import serve
+from .engine import EngineConfig, ServingEngine
+from .kv_cache import BlockPool, SlotAllocator
+from .sampler import sample_tokens
+
+__all__ = ["serve", "EngineConfig", "ServingEngine", "BlockPool", "SlotAllocator",
+           "sample_tokens"]

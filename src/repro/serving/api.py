@@ -1,0 +1,41 @@
+"""One-call serving facade: build an engine around any architecture +
+scheduler and serve a request list.
+
+    from repro.serving.api import serve
+    results = serve("qwen3-4b", scheduler="ewsjf", requests=reqs)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ..configs import get_config, get_smoke_config
+from ..core import EWSJFConfig, EWSJFScheduler, FCFSScheduler, Request, SJFScheduler
+from ..models import init_params
+from .engine import EngineConfig, ServingEngine
+
+_SCHEDULERS = {
+    "fcfs": lambda: FCFSScheduler(),
+    "sjf": lambda: SJFScheduler(),
+    "ewsjf": lambda: EWSJFScheduler(EWSJFConfig(min_history=8,
+                                                reopt_interval=0.5)),
+}
+
+
+def serve(arch: str, requests: list[Request], *, scheduler: str = "ewsjf",
+          smoke: bool = True, params=None,
+          engine_config: Optional[EngineConfig] = None,
+          seed: int = 0) -> dict:
+    """Serve ``requests`` to completion; returns {finished, stats, engine}."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if params is None:
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+    sched = _SCHEDULERS[scheduler]()
+    eng = ServingEngine(cfg, params, sched,
+                        engine_config or EngineConfig(
+                            max_slots=4, s_max=256, kv_pool_tokens=4096,
+                            buckets=(32, 64, 128, 256)))
+    finished = eng.run(requests)
+    return {"finished": finished, "stats": eng.stats(), "engine": eng}

@@ -1,0 +1,91 @@
+"""Paged KV block pool + slot-based decode cache management.
+
+Two layers of bookkeeping, mirroring vLLM's split between logical blocks
+and physical memory (TPU adaptation — DESIGN.md §3):
+
+* ``BlockPool`` — host-side paged accounting (allocate/free/fragmentation
+  stats).  The EWSJF admission budget reads ``free_blocks`` from here, so
+  scheduling semantics match vLLM's: a request is admitted only when its
+  prompt fits in free pages, decode growth can exhaust the pool and trigger
+  preemption.
+* ``SlotAllocator`` — the static-shape execution side: a fixed number of
+  decode slots (batch rows of the compiled serve_step); each active
+  sequence owns one slot + its pages.
+
+The Pallas paged_attention kernel consumes the same (pages, block_table)
+layout; the CPU engine uses contiguous per-slot caches with the identical
+accounting so scheduler behaviour is bit-identical.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class BlockPool:
+    total_blocks: int
+    block_size: int = 16
+    free_blocks: int = field(init=False)
+    allocs: dict = field(default_factory=dict)    # seq_id -> n_blocks
+
+    def __post_init__(self):
+        self.free_blocks = self.total_blocks
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.blocks_for(tokens) <= self.free_blocks
+
+    def allocate(self, seq_id: int, tokens: int) -> bool:
+        need = self.blocks_for(tokens)
+        if need > self.free_blocks:
+            return False
+        self.free_blocks -= need
+        self.allocs[seq_id] = self.allocs.get(seq_id, 0) + need
+        return True
+
+    def grow(self, seq_id: int, new_total_tokens: int) -> bool:
+        """Ensure seq owns enough blocks for new_total_tokens; may fail."""
+        need = self.blocks_for(new_total_tokens) - self.allocs.get(seq_id, 0)
+        if need <= 0:
+            return True
+        if need > self.free_blocks:
+            return False
+        self.free_blocks -= need
+        self.allocs[seq_id] += need
+        return True
+
+    def free(self, seq_id: int) -> None:
+        self.free_blocks += self.allocs.pop(seq_id, 0)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.free_blocks / max(self.total_blocks, 1)
+
+
+@dataclass
+class SlotAllocator:
+    n_slots: int
+    free: list = field(default_factory=list)
+    owner: dict = field(default_factory=dict)     # slot -> seq_id
+
+    def __post_init__(self):
+        self.free = list(range(self.n_slots))
+
+    def acquire(self, seq_id: int) -> Optional[int]:
+        if not self.free:
+            return None
+        slot = self.free.pop(0)
+        self.owner[slot] = seq_id
+        return slot
+
+    def release(self, slot: int) -> None:
+        self.owner.pop(slot, None)
+        self.free.append(slot)
+        self.free.sort()
+
+    def active_slots(self) -> list:
+        return sorted(self.owner)

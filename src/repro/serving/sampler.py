@@ -1,0 +1,20 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """logits (B, 1, V) → tokens (B, 1) i32."""
+    lg = logits[:, 0, :]
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    lg = lg / temperature
+    if top_k and top_k > 0:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        kth = vals[:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    toks = jax.random.categorical(key, lg, axis=-1)
+    return toks[:, None].astype(jnp.int32)

@@ -1,0 +1,8 @@
+"""Training substrate: AdamW, train-step factory, synthetic data pipeline."""
+from .data import DataConfig, TokenDataset, hash_tokenize
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_lr
+from .train_loop import init_train_state, make_train_step
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "cosine_lr", "make_train_step", "init_train_state",
+           "TokenDataset", "DataConfig", "hash_tokenize"]

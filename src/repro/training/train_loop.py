@@ -1,0 +1,60 @@
+"""train_step factory: value_and_grad over the model loss + AdamW update,
+with optional microbatch gradient accumulation (lax.scan over microbatches —
+keeps activation memory flat at large global batch)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import train_loss
+from ..models.transformer import MoECtx
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    moe_ctx: MoECtx = MoECtx(),
+                    num_microbatches: int = 1, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  batch leaves have leading dim = global_batch."""
+
+    def loss_fn(params, batch):
+        return train_loss(params, batch, cfg, moe_ctx, remat=remat)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if num_microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(t):
+                B = t.shape[0]
+                mb = B // num_microbatches
+                return t.reshape(num_microbatches, mb, *t.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_g), micro)
+            loss = loss / num_microbatches
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.float32):
+    from ..models.model import init_params
+    params = init_params(key, cfg, dtype=dtype)
+    return params, adamw_init(params)

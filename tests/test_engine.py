@@ -1,0 +1,88 @@
+"""Serving-engine integration: real JAX execution, EWSJF vs FCFS, paging."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (EWSJFConfig, EWSJFScheduler, FCFSScheduler, Request)
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("qwen3-4b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def mixed_requests(n=16, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        short = rng.random() < 0.7
+        ln = int(rng.integers(8, 24)) if short else int(rng.integers(100, 200))
+        out.append(Request(prompt_len=ln, arrival_time=0.0,
+                           max_new_tokens=int(rng.integers(2, 5))))
+    return out
+
+
+def test_engine_serves_all(model):
+    cfg, params = model
+    eng = ServingEngine(cfg, params, FCFSScheduler(),
+                        EngineConfig(max_slots=4, s_max=256,
+                                     kv_pool_tokens=2048,
+                                     buckets=(32, 64, 128, 256)))
+    fin = eng.run(mixed_requests(12), max_steps=2000)
+    assert len(fin) == 12
+    for r in fin:
+        assert r.generated >= 1
+        assert r.ttft is not None and r.ttft >= 0
+
+
+def test_engine_ewsjf_reduces_padding(model):
+    cfg, params = model
+    stats = {}
+    for name, sched in [("fcfs", FCFSScheduler()),
+                        ("ewsjf", EWSJFScheduler(EWSJFConfig(
+                            min_history=8, reopt_interval=0.2)))]:
+        eng = ServingEngine(cfg, params, sched,
+                            EngineConfig(max_slots=4, s_max=256,
+                                         kv_pool_tokens=4096,
+                                         buckets=(32, 64, 128, 256)))
+        eng.run(mixed_requests(32, seed=1), max_steps=4000)
+        stats[name] = eng.stats()
+    assert stats["ewsjf"]["padding_waste"] < stats["fcfs"]["padding_waste"] - 0.1
+
+
+def test_engine_outputs_independent_of_scheduler(model):
+    """Greedy decoding: each request's tokens must not depend on the
+    admission order (isolation of slots + per-row positions)."""
+    cfg, params = model
+    outs = {}
+    for name, sched in [("fcfs", FCFSScheduler()),
+                        ("ewsjf", EWSJFScheduler(EWSJFConfig(min_history=8)))]:
+        reqs = mixed_requests(10, seed=2)
+        for i, r in enumerate(reqs):
+            r.prompt_tokens = (np.arange(r.prompt_len) * 7 + i) % cfg.vocab_size
+            r.prompt_tokens = r.prompt_tokens.astype(np.int32)
+        eng = ServingEngine(cfg, params, sched,
+                            EngineConfig(max_slots=4, s_max=256,
+                                         kv_pool_tokens=4096,
+                                         buckets=(32, 64, 128, 256)))
+        fin = eng.run(reqs, max_steps=2000)
+        outs[name] = {r.prompt_len: r.generated for r in fin}
+    assert outs["fcfs"] == outs["ewsjf"]
+
+
+def test_engine_preemption_requeues(model):
+    cfg, params = model
+    eng = ServingEngine(cfg, params, FCFSScheduler(),
+                        EngineConfig(max_slots=4, s_max=256,
+                                     kv_pool_tokens=256,   # tiny pool
+                                     buckets=(32, 64, 128)))
+    reqs = [Request(prompt_len=60, arrival_time=0.0, max_new_tokens=8)
+            for _ in range(4)]
+    fin = eng.run(reqs, max_steps=2000)
+    assert len(fin) == 4                      # everything still completes

@@ -1,0 +1,73 @@
+"""Cluster fault tolerance: failure recovery, stragglers, elasticity."""
+
+import numpy as np
+
+from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, Request
+from repro.distributed import ClusterConfig, ClusterController
+
+
+def mk(n_pods=3):
+    sched = EWSJFScheduler(EWSJFConfig(min_history=8))
+    return ClusterController(sched, CostModel(),
+                             ClusterConfig(n_pods=n_pods,
+                                           max_inflight_per_pod=16))
+
+
+def submit(ctl, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        ctl.sched.submit(Request(prompt_len=int(rng.integers(32, 2048))),
+                         now=ctl.now)
+
+
+def drive(ctl, rounds=60, dt=2.0, fail_at=None, fail_pod=0):
+    for i in range(rounds):
+        ctl.route_step()
+        if fail_at is not None and i == fail_at:
+            ctl.remove_pod(fail_pod, graceful=False)
+        ctl.advance(dt)
+        ctl.check_health()
+
+
+def test_pod_failure_requeues_inflight():
+    ctl = mk()
+    submit(ctl, 40)
+    drive(ctl, fail_at=3)
+    assert len(ctl.finished) == 40            # no request lost
+    assert ctl.reenqueued > 0                 # recovery actually happened
+    assert sum(p.alive for p in ctl.pods.values()) == 2
+
+
+def test_straggler_detected_and_drained():
+    ctl = mk(n_pods=4)
+    ctl.pods[2].speed = 0.05                  # 20x slower
+    submit(ctl, 60)
+    drive(ctl, rounds=100)
+    assert len(ctl.finished) == 60
+    assert not ctl.pods[2].alive or ctl.pods[2].draining
+
+
+def test_elastic_scale_up_absorbs_load():
+    ctl = mk(n_pods=1)
+    submit(ctl, 60)
+    for i in range(10):
+        ctl.route_step(); ctl.advance(2.0)
+    ctl.add_pod(speed=1.0)
+    ctl.add_pod(speed=1.0)
+    drive(ctl, rounds=80)
+    assert len(ctl.finished) == 60
+    assert sum(p.served > 0 for p in ctl.pods.values()) >= 2
+
+
+def test_controller_state_roundtrip(tmp_path):
+    ctl = mk()
+    submit(ctl, 20)
+    ctl.sched.maybe_reoptimize(1.0, force=True)
+    path = tmp_path / "ctl.json"
+    ctl.save_state(path)
+    ctl2 = mk()
+    ctl2.load_state(path)
+    assert ctl2.sched.waiting() == ctl.sched.waiting()
+    b1 = [(q.bounds.lo, q.bounds.hi) for q in ctl.sched.manager.queues]
+    b2 = [(q.bounds.lo, q.bounds.hi) for q in ctl2.sched.manager.queues]
+    assert b1 == b2

@@ -1,0 +1,67 @@
+"""Bayesian meta-optimizer (SS4.4.2): GP sanity + optimization quality."""
+
+import numpy as np
+
+from repro.core import BayesianMetaOptimizer, MetaParams
+from repro.core.meta_optimizer import GaussianProcess
+
+
+class TestGP:
+    def test_interpolation(self):
+        X = np.linspace(0, 1, 8)[:, None]
+        y = np.sin(4 * X[:, 0])
+        gp = GaussianProcess(noise=1e-6)
+        gp.fit(X, y)
+        mu, sd = gp.predict(X)
+        assert np.max(np.abs(mu - y)) < 1e-2
+        assert np.all(sd < 0.15)
+
+    def test_uncertainty_grows_off_data(self):
+        X = np.full((4, 1), 0.5)
+        gp = GaussianProcess()
+        gp.fit(X, np.ones(4))
+        _, sd_on = gp.predict(np.array([[0.5]]))
+        _, sd_off = gp.predict(np.array([[0.0]]))
+        assert sd_off > sd_on
+
+
+class TestBO:
+    def test_beats_random_on_synthetic_landscape(self):
+        """Non-convex synthetic reward over Theta; BO >= random at equal
+        trial budget (averaged over seeds)."""
+        def reward(theta: MetaParams) -> float:
+            v = np.asarray(theta.as_vector())
+            return (-np.sum((v[:4] - np.array([0.5, 1.0, -0.5, 2.0])) ** 2)
+                    + 0.5 * np.sin(3 * v[6]))
+
+        bo_best, rand_best = [], []
+        for seed in range(3):
+            opt = BayesianMetaOptimizer(seed=seed, n_init=4)
+            for _ in range(14):
+                th = opt.suggest()
+                opt.observe(th, reward(th))
+            bo_best.append(opt.best_reward)
+            rng = np.random.default_rng(seed)
+            best = -np.inf
+            for _ in range(14):
+                u = rng.random(7)
+                th = MetaParams.from_vector(
+                    opt.bounds[:, 0] + u * (opt.bounds[:, 1] - opt.bounds[:, 0]))
+                best = max(best, reward(th))
+            rand_best.append(best)
+        assert np.mean(bo_best) >= np.mean(rand_best) - 0.05
+
+    def test_convergence_flag(self):
+        opt = BayesianMetaOptimizer(seed=0, n_init=3)
+        for i in range(8):
+            th = opt.suggest()
+            opt.observe(th, 1.0)              # flat landscape
+        assert opt.converged()
+
+    def test_fairness_weight_floor(self):
+        """Suggested Theta always keeps w_urg > 0 (Thm A.1 precondition)."""
+        opt = BayesianMetaOptimizer(seed=0)
+        for _ in range(6):
+            th = opt.suggest()
+            opt.observe(th, 0.0)
+            assert th.b_urg > 0

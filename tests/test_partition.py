@@ -1,0 +1,86 @@
+"""Refine-and-Prune (paper SS4.2): unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PartitionConfig, kmeans_partition, refine_and_prune,
+                        static_partition, validate_partition)
+from repro.core.partition import kmeans_1d, prune_clusters, refine_cluster
+
+
+def bimodal(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.concatenate([rng.integers(32, 256, int(n * 0.8)),
+                           rng.integers(1024, 4096, n - int(n * 0.8))])
+
+
+class TestStages:
+    def test_kmeans_contiguous(self):
+        vals = bimodal()
+        cl = kmeans_1d(vals, 3)
+        assert 1 <= len(cl) <= 3
+        # contiguity: each cluster's max <= next cluster's min
+        for a, b in zip(cl[:-1], cl[1:]):
+            assert a[-1] <= b[0]
+
+    def test_refine_splits_significant_gap(self):
+        c = np.array([1., 2., 3., 4., 100., 101., 102., 103.])
+        out = refine_cluster(c, PartitionConfig(alpha_split=3.0, min_width=1,
+                                                min_cluster_size=2))
+        assert len(out) == 2
+
+    def test_refine_keeps_uniform(self):
+        c = np.arange(100, dtype=float)
+        out = refine_cluster(c, PartitionConfig(alpha_split=3.0))
+        assert len(out) == 1
+
+    def test_prune_respects_budget(self):
+        clusters = [np.array([float(i * 10), i * 10 + 1.0]) for i in range(50)]
+        out = prune_clusters(clusters, PartitionConfig(max_queues=8))
+        assert len(out) == 8
+        total = sum(len(c) for c in out)
+        assert total == 100                    # no request lost
+
+    def test_deep_history_no_recursion_error(self):
+        rng = np.random.default_rng(0)
+        vals = rng.integers(1, 1_000_000, size=100_000)
+        bounds = refine_and_prune(vals, PartitionConfig(max_queues=32))
+        validate_partition(bounds)
+
+
+class TestPipeline:
+    def test_bimodal_discovers_structure(self):
+        bounds = refine_and_prune(bimodal(), PartitionConfig(max_queues=32))
+        validate_partition(bounds)
+        assert 2 <= len(bounds) <= 32
+        # the inter-mode gap (256..1024) must be a queue boundary region
+        edges = [b.hi for b in bounds[:-1]]
+        assert any(256 <= e <= 1100 for e in edges)
+
+    def test_kmeans_baseline(self):
+        bounds = kmeans_partition(bimodal(), 10)
+        validate_partition(bounds)
+        assert len(bounds) <= 10
+
+    def test_static_partition(self):
+        bounds = static_partition(0, 4096, 8)
+        validate_partition(bounds)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=100_000),
+                    min_size=1, max_size=500),
+           st.integers(min_value=2, max_value=64),
+           st.floats(min_value=1.1, max_value=8.0))
+    def test_property_invariants(self, lens, max_q, alpha):
+        """Contiguous, non-overlapping, bounded, covering [0, inf) — for any
+        input distribution and any (max_queues, alpha) policy."""
+        bounds = refine_and_prune(
+            lens, PartitionConfig(max_queues=max_q, alpha_split=alpha))
+        validate_partition(bounds)
+        assert len(bounds) <= max(max_q, 3) + 1
+        # every input value routes to exactly one interval
+        for v in lens[:50]:
+            hits = [b for b in bounds
+                    if b.lo <= v < b.hi or (b.hi == float("inf") and v >= b.lo)]
+            assert len(hits) == 1

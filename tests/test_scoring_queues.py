@@ -1,0 +1,133 @@
+"""Scoring (Eq. 1/4, Thm A.1) + dispatcher/bubble queues (Alg. 2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BubbleConfig, CostModel, MetaParams, QueueBounds,
+                        QueueManager, Request, compute_score, make_cost_fn,
+                        weights_for_queue)
+from repro.core.scoring import QueueProfile
+
+
+def mk_profile(index=0, mean_len=100.0, meta=None):
+    meta = meta or MetaParams()
+    return QueueProfile(index=index, mean_len=mean_len,
+                        weights=weights_for_queue(meta, mean_len))
+
+
+class TestScoring:
+    def setup_method(self):
+        self.c = make_cost_fn(CostModel())
+
+    def test_starvation_freedom_monotone(self):
+        """Thm A.1: score grows without bound in wait time."""
+        req = Request(prompt_len=4096, arrival_time=0.0)
+        prof = mk_profile(index=5, mean_len=4000.0)
+        scores = [compute_score(req, prof, now=t, c_prefill=self.c)
+                  for t in (0, 10, 100, 1000, 10000)]
+        assert all(b > a for a, b in zip(scores, scores[1:]))
+        assert scores[-1] > 1000 * max(scores[0], 1e-9)
+
+    def test_long_eventually_beats_fresh_short(self):
+        """A waiting long request must eventually outrank a fresh short."""
+        long_req = Request(prompt_len=4096, arrival_time=0.0)
+        long_prof = mk_profile(index=9, mean_len=4000.0)
+        short_prof = mk_profile(index=0, mean_len=64.0)
+        t = 1.0
+        while t < 1e7:
+            s_long = compute_score(long_req, long_prof, now=t, c_prefill=self.c)
+            fresh = Request(prompt_len=64, arrival_time=t)
+            s_short = compute_score(fresh, short_prof, now=t, c_prefill=self.c)
+            if s_long > s_short:
+                break
+            t *= 2
+        assert t < 1e7, "long request starved"
+
+    def test_sjf_bias_at_equal_wait(self):
+        """At equal (small) wait, shorter queues must score higher."""
+        short = compute_score(Request(prompt_len=64, arrival_time=0.0),
+                              mk_profile(0, 64.0), now=0.1, c_prefill=self.c)
+        long = compute_score(Request(prompt_len=4096, arrival_time=0.0),
+                             mk_profile(9, 4000.0), now=0.1, c_prefill=self.c)
+        assert short > long
+
+    def test_context_aware_weights(self):
+        meta = MetaParams(a_urg=-0.5, b_urg=1.5, a_fair=0.8, b_fair=0.2)
+        w_short = weights_for_queue(meta, 64.0)
+        w_long = weights_for_queue(meta, 4096.0)
+        assert w_short.w_urgency > w_long.w_urgency     # urgency on shorts
+        assert w_long.w_fairness > w_short.w_fairness   # fairness on longs
+
+
+class TestBubbleQueues:
+    def mk(self, bounds=None):
+        bounds = bounds or [QueueBounds(0, 100), QueueBounds(100, 1000),
+                            QueueBounds(1000, float("inf"))]
+        return QueueManager(bounds, MetaParams(), BubbleConfig(
+            default_bubble_width=100.0))
+
+    def test_interval_routing(self):
+        m = self.mk()
+        r = Request(prompt_len=50)
+        q = m.route(r)
+        assert q.bounds.contains(50)
+
+    def test_tolerance_assigns_left(self):
+        """Alg. 2 line 3: L <= Q_i.max_len x 1.10 -> assign to Q_i."""
+        m = self.mk()
+        for ln in (10, 90, 95):
+            m.route(Request(prompt_len=ln))
+        n_before = len(m.queues)
+        m.route(Request(prompt_len=99))       # within 1.1x of observed mass
+        assert len(m.queues) == n_before
+
+    def test_true_gap_creates_bubble(self):
+        """Alg. 2 lines 8-14: request far from both neighbours."""
+        m = self.mk()
+        for ln in (10, 20, 30):
+            m.route(Request(prompt_len=ln))
+        for ln in (900, 950):
+            m.route(Request(prompt_len=ln))
+        n_before = len(m.queues)
+        q = m.route(Request(prompt_len=500))  # mid-gap
+        assert q.is_bubble
+        assert len(m.queues) > n_before
+        assert q.bounds.contains(500)
+        # partition still contiguous
+        for a, b in zip(m.queues[:-1], m.queues[1:]):
+            assert a.bounds.hi == b.bounds.lo
+
+    def test_bubble_pruned_after_empty_threshold(self):
+        m = self.mk()
+        m.empty_threshold = 3
+        for ln in (10, 20, 900):
+            m.route(Request(prompt_len=ln))
+        q = m.route(Request(prompt_len=500))
+        assert q.is_bubble
+        q.pop()                                # drain the bubble
+        for _ in range(5):
+            m.prune_empty()
+        assert all(not qq.is_bubble for qq in m.queues)
+        for a, b in zip(m.queues[:-1], m.queues[1:]):
+            assert a.bounds.hi == b.bounds.lo
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=10_000),
+                    min_size=1, max_size=200))
+    def test_property_routing_total_and_consistent(self, lens):
+        """Every request lands in a queue whose bounds contain it; the
+        partition stays contiguous after arbitrary bubble creation."""
+        m = self.mk()
+        for ln in lens:
+            q = m.route(Request(prompt_len=ln))
+            # Alg. 2's ±10% tolerance bands may assign near-misses to the
+            # adjacent data queue; the request must be inside the queue's
+            # interval OR within tolerance of its observed data.
+            assert (q.bounds.contains(float(ln))
+                    or q.obs_min * 0.89 <= ln <= q.obs_max * 1.11)
+        assert m.queues[0].bounds.lo == 0.0
+        assert m.queues[-1].bounds.hi == float("inf")
+        for a, b in zip(m.queues[:-1], m.queues[1:]):
+            assert a.bounds.hi == b.bounds.lo
+        assert m.waiting_count() == len(lens)

@@ -1,0 +1,97 @@
+"""Simulator (paper evaluation substrate): conservation + claim structure."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, EngineParams, EWSJFConfig, EWSJFScheduler,
+                        FCFSScheduler, ServingSimulator, SJFScheduler,
+                        WorkloadSpec)
+from repro.core.cost_model import LLAMA2_13B_COST
+
+
+def cm():
+    return CostModel(model=LLAMA2_13B_COST, n_chips=4, mfu=0.15, hbm_eff=0.7)
+
+
+def ep(**kw):
+    base = dict(max_num_seqs=256, kv_pool_tokens=131072, bucket_pad=False,
+                ttft_timeout=90.0)
+    base.update(kw)
+    return EngineParams(**base)
+
+
+def ewsjf():
+    return EWSJFScheduler(EWSJFConfig(min_history=64, reopt_interval=30.0,
+                                      trial_interval=60.0), cm())
+
+
+class TestWorkload:
+    def test_bimodal_mix(self):
+        reqs = WorkloadSpec(n_requests=2000, seed=0).generate()
+        lens = np.array([r.prompt_len for r in reqs])
+        assert 0.75 < np.mean(lens <= 256) < 0.85
+        assert lens.min() >= 32 and lens.max() <= 4096
+
+    def test_poisson_arrivals(self):
+        reqs = WorkloadSpec(n_requests=5000, arrival_rate=20.0, seed=1).generate()
+        inter = np.diff([r.arrival_time for r in reqs])
+        assert abs(np.mean(inter) - 1 / 20.0) < 0.005
+
+
+class TestConservation:
+    def test_all_requests_accounted(self):
+        base = WorkloadSpec(n_requests=400, arrival_rate=20.0, seed=0).generate()
+        sim = ServingSimulator(ewsjf(), cm(), ep())
+        r = sim.run(copy.deepcopy(base))
+        assert len(r.finished) + len(r.aborted) == 400
+        for q in r.finished:
+            assert q.finish_time is not None and q.generated >= 1
+            assert q.ttft is not None and q.ttft >= 0
+
+    def test_no_timeout_no_aborts(self):
+        base = WorkloadSpec(n_requests=300, arrival_rate=20.0, seed=0).generate()
+        sim = ServingSimulator(FCFSScheduler(), cm(), ep(ttft_timeout=None))
+        r = sim.run(copy.deepcopy(base))
+        assert len(r.aborted) == 0
+        assert len(r.finished) == 300
+
+
+class TestPaperClaims:
+    """Reduced-scale versions of the paper's headline claims."""
+
+    def setup_method(self):
+        self.base = WorkloadSpec(n_requests=1200, arrival_rate=40.0,
+                                 seed=0).generate()
+
+    def _run(self, sched, **kw):
+        return ServingSimulator(sched, cm(), ep(**kw)).run(
+            copy.deepcopy(self.base))
+
+    def test_ewsjf_beats_fcfs_goodput_under_overload(self):
+        f = self._run(FCFSScheduler())
+        e = self._run(ewsjf())
+        assert e.tok_per_s > f.tok_per_s * 1.15      # paper: +30%+
+
+    def test_ewsjf_cuts_short_ttft(self):
+        f = self._run(FCFSScheduler())
+        e = self._run(ewsjf())
+        assert (e.ttft_stats()["short"]["mean"]
+                < f.ttft_stats()["short"]["mean"] / 4.0)   # paper: up to 4x
+
+    def test_sjf_starves_longs_ewsjf_does_not(self):
+        base = WorkloadSpec(n_requests=1200, arrival_rate=10.0,
+                            seed=0).generate()
+        out = {}
+        for name, s in (("sjf", SJFScheduler()), ("ewsjf", ewsjf())):
+            r = ServingSimulator(s, cm(), ep()).run(copy.deepcopy(base))
+            la = sum(1 for q in r.aborted if q.prompt_len > 256)
+            lf = sum(1 for q in r.finished if q.prompt_len > 256)
+            out[name] = la / max(la + lf, 1)
+        assert out["sjf"] > 2.5 * out["ewsjf"]       # App C vs Thm A.1
+
+    def test_padding_waste_reduced_in_tpu_mode(self):
+        f = self._run(FCFSScheduler(), bucket_pad=True)
+        e = self._run(ewsjf(), bucket_pad=True)
+        assert e.padding_waste < f.padding_waste * 0.75

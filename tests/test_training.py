@@ -1,0 +1,75 @@
+"""Training substrate: loss decreases, microbatch-accumulation equivalence,
+optimizer math."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import MoECtx
+from repro.training import (AdamWConfig, DataConfig, TokenDataset, adamw_init,
+                            adamw_update, cosine_lr, init_train_state,
+                            make_train_step)
+
+
+def test_loss_decreases_on_planted_structure():
+    cfg = get_smoke_config("llama2-13b")
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr_peak=3e-3, warmup_steps=5, total_steps=40),
+        MoECtx(), remat=True))
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    it = TokenDataset(cfg, DataConfig(global_batch=4, seq_len=64)).batches()
+    losses = []
+    for _ in range(40):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step_fn(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_microbatch_equivalence():
+    """Mean loss and mean gradient must match between 1 and 2 microbatches.
+    (Compared pre-optimizer: Adam normalizes near-zero float residues on
+    never-touched vocab rows into full lr-sized steps, so post-update params
+    are not the right comparison.)"""
+    from repro.models.model import train_loss
+    cfg = get_smoke_config("qwen3-4b")
+    params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    it = TokenDataset(cfg, DataConfig(global_batch=4, seq_len=32)).batches()
+    b = {k: jnp.asarray(v) for k, v in next(it).items()}
+
+    def loss_fn(p, batch):
+        return train_loss(p, batch, cfg, MoECtx(), remat=False)
+
+    l1, g1 = jax.value_and_grad(loss_fn)(params, b)
+    half = {k: v.reshape(2, 2, *v.shape[1:]) for k, v in b.items()}
+    l2a, g2a = jax.value_and_grad(loss_fn)(
+        params, {k: v[0] for k, v in half.items()})
+    l2b, g2b = jax.value_and_grad(loss_fn)(
+        params, {k: v[1] for k, v in half.items()})
+    l2 = 0.5 * (l2a + l2b)
+    assert abs(float(l1) - float(l2)) < 5e-4
+    for a, ba, bb in zip(jax.tree.leaves(g1), jax.tree.leaves(g2a),
+                         jax.tree.leaves(g2b)):
+        avg = 0.5 * (np.asarray(ba) + np.asarray(bb))
+        np.testing.assert_allclose(np.asarray(a), avg, atol=3e-4,
+                                   rtol=1e-2)   # bf16 compute path
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_lr(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < 1.0 and lrs[4] < 1e-6
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 1e6)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr_peak=1.0, warmup_steps=1, total_steps=2,
+                      clip_norm=1.0, weight_decay=0.0)
+    new, state, m = adamw_update(grads, state, params, cfg)
+    assert float(m["grad_norm"]) > 1e5
+    assert np.all(np.abs(np.asarray(new["w"])) < 10.0)
