@@ -1,0 +1,79 @@
+"""Cluster routing benchmark (beyond-paper): round-robin vs least-loaded vs
+EWSJF-aware routing on the paper's mixed workload, across three fleet
+shapes:
+
+  * uniform   — 4 identical unified replicas;
+  * straggler — one replica at 0.25x speed (health monitor may drain it);
+  * disagg    — 2 prefill + 2 decode replicas with KV handoffs over ICI.
+
+Claim checked inline: the EWSJF-aware router improves *short-request mean
+TTFT* over round-robin on every scenario without giving up more than 5%
+total token throughput.  Each replica runs its own EWSJF scheduler; only
+the cluster-level routing policy varies.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.cluster import make_fleet, make_router, run_router_comparison
+from repro.core import EWSJFConfig, EWSJFScheduler, WorkloadSpec
+
+from .common import SCALE, cost_model, emit
+
+ROUTERS = ("round_robin", "least_loaded", "ewsjf")
+
+
+def _scheduler_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=64, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+def _fleet_factory(scenario: str, cost):
+    if scenario == "uniform":
+        kw = {}
+    elif scenario == "straggler":
+        kw = dict(speeds=[1.0, 1.0, 1.0, 0.25])
+    elif scenario == "disagg":
+        kw = dict(roles=["prefill", "prefill", "decode", "decode"])
+    else:
+        raise ValueError(scenario)
+    return lambda: make_fleet(4, cost, scheduler_factory=_scheduler_factory,
+                              **kw)
+
+
+def main() -> None:
+    cost = cost_model()
+    n = max(300, int(10_000 * SCALE))
+    workload = WorkloadSpec(n_requests=n, arrival_rate=20.0).generate()
+
+    for scenario in ("uniform", "straggler", "disagg"):
+        routers = {name: make_router(name, cost) for name in ROUTERS}
+        t0 = time.perf_counter()
+        out = run_router_comparison(_fleet_factory(scenario, cost), routers,
+                                    workload, cost)
+        wall_us = (time.perf_counter() - t0) * 1e6
+
+        parts = []
+        for name in ROUTERS:
+            res = out[name]
+            st = res.ttft_stats()
+            parts.append(f"{name}_short_ttft={st['short']['mean']:.4f}")
+            parts.append(f"{name}_tok_s={res.tok_per_s:.1f}")
+            parts.append(f"{name}_fin={len(res.finished)}")
+        rr, ew = out["round_robin"], out["ewsjf"]
+        ttft_gain = (rr.ttft_stats()["short"]["mean"]
+                     / max(ew.ttft_stats()["short"]["mean"], 1e-9))
+        thr_ratio = ew.tok_per_s / max(rr.tok_per_s, 1e-9)
+        ok = ttft_gain > 1.0 and thr_ratio >= 0.95
+        parts.append(f"ewsjf_vs_rr_short_ttft_x={ttft_gain:.2f}")
+        parts.append(f"ewsjf_vs_rr_tok_ratio={thr_ratio:.3f}")
+        parts.append(f"claim_ok={ok}")
+        if scenario == "disagg":
+            parts.append(f"handoffs={ew.handoff_stats['handoffs']}")
+            parts.append(f"kv_gb={ew.handoff_stats['total_gb']:.2f}")
+        emit(f"cluster_routing_{scenario}_n{n}", wall_us, "|".join(parts))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,11 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_kernels, bench_meta_optimizer, bench_padding,
-                   bench_scheduler_overhead, bench_table3_queue_count,
-                   bench_table10_summary, bench_tables4to7_load,
-                   bench_tables8to9_regimes, bench_ttft_starvation)
+    from . import (bench_cluster_routing, bench_kernels, bench_meta_optimizer,
+                   bench_padding, bench_scheduler_overhead,
+                   bench_table3_queue_count, bench_table10_summary,
+                   bench_tables4to7_load, bench_tables8to9_regimes,
+                   bench_ttft_starvation)
     sections = [
         ("Table 3 (queue count)", bench_table3_queue_count.main),
         ("Tables 4-7 / Fig 3 (load sweep)", bench_tables4to7_load.main),
@@ -27,6 +28,7 @@ def main() -> None:
         ("Meta-optimizer (App B / Fig 5)", bench_meta_optimizer.main),
         ("Scheduler overhead (SS5/Table 11)", bench_scheduler_overhead.main),
         ("TPU padding waste (beyond-paper)", bench_padding.main),
+        ("Cluster routing (beyond-paper)", bench_cluster_routing.main),
         ("Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()

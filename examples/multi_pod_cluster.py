@@ -1,5 +1,6 @@
-"""Multi-pod serving with failures, stragglers and elastic scaling:
-EWSJF as the global admission layer (DESIGN.md SS3, beyond-paper scope).
+"""Cluster data plane demo: EWSJF-aware routing over a replica fleet with
+failures, stragglers, elastic scale-up — then a disaggregated
+prefill/decode pool with KV-handoff accounting.
 
     PYTHONPATH=src python examples/multi_pod_cluster.py
 """
@@ -8,40 +9,62 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
+from repro.cluster import (AdmissionController, ClusterSimulator,
+                           ScenarioEvent, make_fleet, make_router)
+from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, WorkloadSpec
 
-from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, Request
-from repro.distributed import ClusterConfig, ClusterController
+
+def scheduler_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=32, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+def print_result(res):
+    ttft = res.ttft_stats()
+    print(f"  finished {len(res.finished)} | shed {len(res.shed)} | "
+          f"dropped {len(res.dropped)} | re-enqueued {res.reenqueued}")
+    print(f"  short mean TTFT {ttft['short']['mean']*1e3:7.1f} ms | "
+          f"long mean TTFT {ttft['long']['mean']*1e3:7.1f} ms | "
+          f"{res.tok_per_s:7.1f} tok/s")
+    for s in res.replica_stats:
+        print(f"   replica {s['replica_id']} ({s['role']:8s} "
+              f"speed={s['speed']:4.2f}) served={s['served']:4d} "
+              f"alive={s['alive']} draining={s['draining']} "
+              f"kv_occ={s['kv_occupancy']:.2f}")
+    if res.handoff_stats["handoffs"]:
+        h = res.handoff_stats
+        print(f"   KV handoffs: {h['handoffs']} | {h['total_gb']:.1f} GB "
+              f"| mean transfer {h['mean_transfer_ms']:.2f} ms")
+    if res.health["failures"] or res.health["stragglers"]:
+        print(f"   health: failed={res.health['failures']} "
+              f"stragglers_drained={res.health['stragglers']}")
 
 
 def main() -> None:
-    sched = EWSJFScheduler(EWSJFConfig(min_history=16))
-    ctl = ClusterController(sched, CostModel(),
-                            ClusterConfig(n_pods=4, max_inflight_per_pod=32))
-    rng = np.random.default_rng(0)
-    for _ in range(200):
-        ctl.sched.submit(Request(prompt_len=int(rng.integers(32, 4096)),
-                                 max_new_tokens=32), now=0.0)
+    cost = CostModel(mfu=0.15, hbm_eff=0.7)
+    workload = WorkloadSpec(n_requests=400, arrival_rate=30.0).generate()
 
-    ctl.pods[3].speed = 0.1                     # pod 3 is a straggler
-    for i in range(120):
-        ctl.route_step()
-        if i == 10:
-            print("!! pod 0 hard-fails (in-flight work re-enqueued)")
-            ctl.remove_pod(0, graceful=False)
-        if i == 30:
-            pid = ctl.add_pod(speed=1.2)
-            print(f"++ elastic scale-up: pod {pid} joins")
-        ctl.advance(2.0)
-        drained = ctl.check_health()
-        for p in drained:
-            print(f"~~ pod {p} drained (straggler/timeout)")
+    print("== scenario 1: unified fleet with failure / straggler / scale-up")
+    fleet = make_fleet(4, cost, scheduler_factory=scheduler_factory,
+                       speeds=[1.0, 1.0, 1.0, 0.25])   # replica 3 straggles
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           admission=AdmissionController(shed_factor=4.0))
+    res = sim.run(workload, scenario=[
+        ScenarioEvent(time=1.0, action="fail", replica_id=0),
+        ScenarioEvent(time=4.0, action="add_replica",
+                      scheduler_factory=scheduler_factory, speed=1.2),
+    ])
+    print("!! replica 0 hard-failed at t=1 (in-flight work re-enqueued)")
+    print("++ elastic scale-up at t=4; straggler drained by health monitor")
+    print_result(res)
 
-    print(f"\nserved {len(ctl.finished)}/200 requests; "
-          f"re-enqueued after failure: {ctl.reenqueued}")
-    for pid, p in sorted(ctl.pods.items()):
-        print(f"   pod {pid}: served={p.served:4d} alive={p.alive} "
-              f"speed={p.speed}")
+    print("\n== scenario 2: disaggregated 2x prefill + 2x decode pools")
+    fleet = make_fleet(4, cost, scheduler_factory=scheduler_factory,
+                       roles=["prefill", "prefill", "decode", "decode"])
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost)
+    res = sim.run(WorkloadSpec(n_requests=400, arrival_rate=20.0,
+                               seed=1).generate())
+    print_result(res)
 
 
 if __name__ == "__main__":

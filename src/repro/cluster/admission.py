@@ -1,0 +1,98 @@
+"""SLO-class admission control: load shedding + deadline drop.
+
+Once prefill and decode contend (Liu et al., fairness-aware chunked-prefill
+scheduling), a saturated cluster must decide *which* work to refuse, not
+just reorder it.  Requests are classified into SLO classes (interactive /
+standard / batch by default); at arrival the controller compares the
+cluster's best-case queue delay against the class TTFT budget and sheds
+sheddable classes that cannot meet it.  Admitted requests may still be
+deadline-dropped at dispatch time if they aged out while queued — dropping
+at the last moment before prefill recovers the whole prompt cost.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..core.types import Request
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    name: str
+    ttft_target: float          # seconds; admission budget for first token
+    deadline: Optional[float]   # max queueing age before drop (None = never)
+    priority: int = 0           # higher = more important (kept under load)
+    sheddable: bool = True
+
+
+DEFAULT_SLO_CLASSES = (
+    SLOClass("interactive", ttft_target=1.0, deadline=10.0, priority=2,
+             sheddable=False),
+    SLOClass("standard", ttft_target=5.0, deadline=60.0, priority=1),
+    SLOClass("batch", ttft_target=60.0, deadline=None, priority=0),
+)
+
+
+def classify_by_length(req: Request, short_threshold: int = 256) -> str:
+    """Default classifier: short prompts are interactive traffic, long
+    prompts are batch-ish — matching the paper's mixed-workload split.
+    ``Request.priority_class`` overrides when an operator set it: 0 means
+    "no hint" (the dataclass default), 1=interactive, 2=standard,
+    3+=batch."""
+    if req.priority_class:
+        return ("interactive", "standard", "batch")[
+            min(req.priority_class, 3) - 1]
+    return "interactive" if req.prompt_len <= short_threshold else "batch"
+
+
+@dataclass
+class AdmissionDecision:
+    admitted: bool
+    slo: SLOClass
+    reason: str = "ok"
+    est_delay: float = 0.0
+
+
+class AdmissionController:
+    """Replica-facing admission: consulted by the cluster simulator on
+    arrival (shed) and by replicas at dispatch (deadline drop).  Also
+    usable standalone by ``serving.engine`` via the same ``admit`` hook."""
+
+    def __init__(self, classes=DEFAULT_SLO_CLASSES,
+                 classify: Optional[Callable[[Request], str]] = None,
+                 shed_factor: float = 1.0):
+        self.classes = {c.name: c for c in classes}
+        self._classify = classify or classify_by_length
+        self.shed_factor = shed_factor
+        self.shed: dict[str, int] = {c.name: 0 for c in classes}
+        self.admitted: dict[str, int] = {c.name: 0 for c in classes}
+        self.dropped: dict[str, int] = {c.name: 0 for c in classes}
+
+    def slo_of(self, req: Request) -> SLOClass:
+        return self.classes[self._classify(req)]
+
+    def admit(self, req: Request, now: float,
+              est_delay: float) -> AdmissionDecision:
+        """Arrival-time decision given the cluster's best-case queue delay
+        estimate (the router's min route cost)."""
+        slo = self.slo_of(req)
+        if slo.sheddable and est_delay > self.shed_factor * slo.ttft_target:
+            self.shed[slo.name] += 1
+            return AdmissionDecision(False, slo, reason="shed",
+                                     est_delay=est_delay)
+        self.admitted[slo.name] += 1
+        return AdmissionDecision(True, slo, reason="ok", est_delay=est_delay)
+
+    def expired(self, req: Request, now: float) -> bool:
+        """Dispatch-time deadline drop: the request aged out while queued."""
+        slo = self.slo_of(req)
+        if slo.deadline is not None and req.wait_time(now) > slo.deadline:
+            self.dropped[slo.name] += 1
+            return True
+        return False
+
+    def stats(self) -> dict:
+        return {"admitted": dict(self.admitted), "shed": dict(self.shed),
+                "dropped": dict(self.dropped)}

@@ -1,0 +1,66 @@
+"""Disaggregated prefill/decode: KV-handoff types + interconnect accounting.
+
+When the cluster runs split pools (DistServe / Splitwise style), a prefill
+replica finishes the prompt pass and ships the request's KV cache to a
+decode replica.  ``HandoffChannel`` charges the transfer against the ICI
+bandwidth and keeps the aggregate accounting (handoffs, bytes, seconds)
+that the benchmarks report — on TPU pods the KV hop is an ICI transfer,
+not PCIe/NVLink, so the cost model uses the v5e ICI figure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.cost_model import ICI_BW
+from ..core.types import Request
+
+
+@dataclass
+class KVHandoff:
+    """One prefilled request in transit from a prefill to a decode replica."""
+
+    req: Request
+    kv_tokens: int
+    src_replica: int
+    kv_bytes: float = 0.0
+    dst_replica: int = -1
+    ready_time: float = 0.0          # when the KV lands on the destination
+    transfer_time: float = 0.0
+
+
+@dataclass
+class HandoffChannel:
+    """Shared interconnect between the prefill and decode pools.
+
+    Transfers are serialized per channel (one ICI link-group); ``send``
+    returns the handoff stamped with its arrival time at the destination.
+    """
+
+    bandwidth: float = ICI_BW
+    latency: float = 20e-6           # per-hop launch latency
+    busy_until: float = 0.0
+
+    # accounting
+    handoffs: int = 0
+    total_bytes: float = 0.0
+    total_transfer_time: float = 0.0
+
+    def send(self, handoff: KVHandoff, now: float, dst_replica: int) -> KVHandoff:
+        start = max(now, self.busy_until)
+        xfer = self.latency + handoff.kv_bytes / max(self.bandwidth, 1.0)
+        self.busy_until = start + xfer
+        handoff.dst_replica = dst_replica
+        handoff.ready_time = start + xfer
+        handoff.transfer_time = xfer
+        self.handoffs += 1
+        self.total_bytes += handoff.kv_bytes
+        self.total_transfer_time += xfer
+        return handoff
+
+    def stats(self) -> dict:
+        return {"handoffs": self.handoffs,
+                "total_gb": self.total_bytes / 1e9,
+                "total_transfer_s": self.total_transfer_time,
+                "mean_transfer_ms": (self.total_transfer_time
+                                     / max(self.handoffs, 1) * 1e3)}

@@ -1,0 +1,61 @@
+"""Heartbeat-based health monitoring shared by the cluster simulator and
+the legacy ``distributed.ClusterController``: dead-replica detection via
+heartbeat timeout, straggler detection via step-latency EWMA vs the
+cluster median."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable
+
+import numpy as np
+
+from .replica import ReplicaModel
+
+
+@dataclass
+class HealthConfig:
+    heartbeat_timeout: float = 5.0
+    straggler_factor: float = 3.0
+    check_interval: float = 1.0
+
+
+class HealthMonitor:
+    def __init__(self, cfg: HealthConfig | None = None):
+        self.cfg = cfg or HealthConfig()
+        self.failures: list[int] = []
+        self.stragglers: list[int] = []
+        self._last_check = 0.0
+
+    def due(self, now: float) -> bool:
+        return now - self._last_check >= self.cfg.check_interval
+
+    def check(self, replicas: Iterable[ReplicaModel], now: float
+              ) -> tuple[list[ReplicaModel], list[ReplicaModel]]:
+        """Returns (dead, stragglers-to-drain).  The caller owns the
+        consequences (re-enqueue / drain) so recovery policy stays with the
+        data plane, not the detector."""
+        self._last_check = now
+        alive = [r for r in replicas if r.alive]
+        dead = [r for r in alive
+                if now - r.last_heartbeat > self.cfg.heartbeat_timeout
+                and r.has_work()]
+        drain: list[ReplicaModel] = []
+        # Straggler detection compares within a role only: a prefill
+        # replica's step is legitimately orders of magnitude longer than a
+        # decode replica's, so a cross-role median would flag the whole
+        # prefill pool.
+        for role in {r.role for r in alive}:
+            peers = [r for r in alive if r.role == role]
+            ewmas = [r.step_ewma for r in peers if r.step_ewma > 0]
+            if len(ewmas) < 2:
+                continue
+            med = float(np.median(ewmas))
+            drain.extend(r for r in peers
+                         if (not r.draining and r.ewma_obs >= 3
+                             and r.step_ewma
+                             > self.cfg.straggler_factor * med
+                             and r not in dead))
+        self.failures.extend(r.replica_id for r in dead)
+        self.stragglers.extend(r.replica_id for r in drain)
+        return dead, drain

@@ -1,0 +1,330 @@
+"""ReplicaModel — one serving replica of the cluster data plane.
+
+A replica wraps a per-replica ``BaseScheduler`` (any core policy: FCFS /
+SJF / EWSJF) plus cost-model-driven executor state: paged-KV occupancy,
+the in-flight decode batch, a speed multiplier (heterogeneous hardware /
+stragglers) and health flags.  ``step(now)`` runs one engine tick with the
+same step-cost machinery as ``core/simulator.py`` (chunked prefill charge,
+multi-step decode charge, LIFO recompute preemption), so a cluster of
+replicas is benchmarkable on CPU in "simulator units".
+
+Roles (disaggregated prefill/decode, DistServe-style):
+
+  * ``unified``  — prefill + decode on the same replica (default);
+  * ``prefill``  — prefill only; completed prefills are emitted as
+    ``KVHandoff``s (see cluster/disagg.py) for a decode replica, with the
+    KV bytes accounted against the interconnect;
+  * ``decode``   — no local admission; accepts handoffs into its decode
+    batch.  KV-pressure preemptions are *evictions*: recompute requires a
+    prefill replica, so victims go back to the cluster router.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from ..core.batch_builder import BatchBudget
+from ..core.cost_model import CostModel
+from ..core.scheduler import BaseScheduler, FCFSScheduler
+from ..core.types import Request, RequestState, SchedulerSnapshot
+from .disagg import KVHandoff
+
+
+@dataclass
+class ReplicaParams:
+    max_num_seqs: int = 64              # decode slots
+    max_prefill_tokens: int = 8192      # chunked-prefill budget per tick
+    kv_pool_tokens: int = 131072        # paged-KV pool capacity
+    block_size: int = 16
+    decode_steps_per_tick: int = 8
+    bucket_pad: bool = False
+    scheduler_overhead: float = 50e-6
+
+    @property
+    def total_blocks(self) -> int:
+        return self.kv_pool_tokens // self.block_size
+
+
+@dataclass
+class _Running:
+    req: Request
+    kv_tokens: int
+    remaining: int
+
+
+class ReplicaModel:
+    """One replica: scheduler + simulated executor + health state."""
+
+    def __init__(self, replica_id: int, cost: CostModel,
+                 scheduler: Optional[BaseScheduler] = None,
+                 params: ReplicaParams | None = None,
+                 role: str = "unified", speed: float = 1.0,
+                 drop_fn: Optional[Callable[[Request, float], bool]] = None):
+        assert role in ("unified", "prefill", "decode"), role
+        self.replica_id = replica_id
+        self.cost = cost
+        self.sched = scheduler if scheduler is not None else FCFSScheduler()
+        self.p = params or ReplicaParams()
+        self.role = role
+        self.speed = speed
+        # Deadline-drop hook from the admission layer: applied at dispatch
+        # time, the last point where dropping still saves the prefill.
+        self.drop_fn = drop_fn
+
+        # executor state
+        self.running: list[_Running] = []
+        self.free_blocks = self.p.total_blocks
+        self.busy_until = 0.0
+        self.inbox: list[KVHandoff] = []     # decode: pending KV handoffs
+        self.outbox: list[KVHandoff] = []    # prefill: completed prefills
+        self.evicted: list[Request] = []     # decode: preemptions → re-route
+        self.finished: list[Request] = []
+        self.dropped: list[Request] = []     # deadline-dropped at dispatch
+
+        # health / telemetry
+        self.alive = True
+        self.draining = False
+        self.last_heartbeat = 0.0
+        self.step_ewma = 0.0
+        self.ewma_obs = 0            # observations feeding step_ewma
+        self.served = 0
+        self.preemptions = 0
+        self.ticks = 0
+        self.busy_time = 0.0
+
+    # ---- routing-facing introspection -----------------------------------
+
+    @property
+    def pod_id(self) -> int:                 # legacy name (distributed API)
+        return self.replica_id
+
+    def schedulable(self) -> bool:
+        return self.alive and not self.draining
+
+    def accepts_prefill(self) -> bool:
+        return self.schedulable() and self.role in ("unified", "prefill")
+
+    def accepts_decode(self) -> bool:
+        return self.schedulable() and self.role in ("unified", "decode")
+
+    def kv_occupancy(self) -> float:
+        return 1.0 - self.free_blocks / max(self.p.total_blocks, 1)
+
+    def inflight(self) -> int:
+        return len(self.running)
+
+    def scheduler_snapshot(self, now: float) -> SchedulerSnapshot:
+        return self.sched.snapshot(now)
+
+    def exec_residual(self, now: float) -> float:
+        """Seconds until the current engine step finishes."""
+        return max(0.0, self.busy_until - now)
+
+    def backlog_cost(self, now: float) -> float:
+        """Coarse work estimate (seconds at this replica's speed): queued
+        prefill + residual decode of the in-flight batch."""
+        snap = self.sched.snapshot(now)
+        queued = sum(self.cost.c_prefill(q.mean_len) * q.depth
+                     for q in snap.queues if q.depth)
+        decode = sum(rr.remaining * self.cost.decode_step_time(1, rr.kv_tokens)
+                     for rr in self.running)
+        pend = sum(h.req.max_new_tokens
+                   * self.cost.decode_step_time(1, h.kv_tokens)
+                   for h in self.inbox)
+        return (queued + decode + pend) / max(self.speed, 1e-6)
+
+    def has_work(self) -> bool:
+        return bool(self.running or self.inbox
+                    or (self.role != "decode" and self.sched.waiting()))
+
+    # ---- request path ----------------------------------------------------
+
+    def submit(self, req: Request, now: float) -> None:
+        self.sched.submit(req, now)
+
+    def accept_handoff(self, handoff: KVHandoff, now: float) -> None:
+        self.inbox.append(handoff)
+
+    # ---- failure / drain --------------------------------------------------
+
+    def fail(self) -> list[Request]:
+        """Hard failure: everything in flight or queued is lost locally and
+        returned for global re-enqueue (recompute recovery, no KV rescue)."""
+        self.alive = False
+        orphans: list[Request] = []
+        for rr in self.running:
+            orphans.append(rr.req)
+        orphans.extend(h.req for h in self.inbox)
+        # un-shipped handoffs die with the machine holding their KV
+        orphans.extend(h.req for h in self.outbox)
+        orphans.extend(self.sched.drain())
+        self.running = []
+        self.inbox = []
+        self.outbox = []
+        self.free_blocks = self.p.total_blocks
+        for req in orphans:
+            req.state = RequestState.PREEMPTED
+            req.preemptions += 1
+            req.generated = 0
+            req.first_token_time = None
+        return orphans
+
+    def start_drain(self) -> list[Request]:
+        """Graceful drain (straggler mitigation): stop accepting, finish
+        in-flight work, give queued work back for re-routing."""
+        self.draining = True
+        queued = self.sched.drain()
+        for req in queued:
+            req.state = RequestState.WAITING
+        if not self.has_work():
+            self.alive = False
+        return queued
+
+    # ---- one engine tick ---------------------------------------------------
+
+    def step(self, now: float) -> float:
+        """Run one tick; returns the (speed-scaled) wall time consumed."""
+        self.ticks += 1
+        dt = self.p.scheduler_overhead
+
+        if hasattr(self.sched, "maybe_reoptimize"):
+            self.sched.maybe_reoptimize(now)
+
+        dt += self._accept_handoffs(now)
+        if self.role != "decode":
+            dt += self._prefill_tick(now + dt)
+        if self.role != "prefill":
+            dt += self._decode_tick(now + dt)
+
+        a = 0.2
+        self.step_ewma = ((1 - a) * self.step_ewma + a * dt
+                          if self.step_ewma else dt)
+        self.ewma_obs += 1
+        self.busy_time += dt
+        self.last_heartbeat = now + dt
+        if self.draining and not self.has_work():
+            self.alive = False
+        return dt
+
+    def _blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.p.block_size)
+
+    def _accept_handoffs(self, now: float) -> float:
+        still: list[KVHandoff] = []
+        for h in self.inbox:
+            if (h.ready_time > now
+                    or len(self.running) >= self.p.max_num_seqs
+                    or self._blocks_for(h.kv_tokens) > self.free_blocks):
+                still.append(h)
+                continue
+            self.free_blocks -= self._blocks_for(h.kv_tokens)
+            rem = max(h.req.max_new_tokens - h.req.generated, 0)
+            if rem == 0:
+                self.free_blocks += self._blocks_for(h.kv_tokens)
+                self._finish(h.req, now)
+            else:
+                self.running.append(_Running(h.req, h.kv_tokens, rem))
+        self.inbox = still
+        return 0.0           # handoff admission is free; transfer was charged
+                             # by the channel
+
+    def _prefill_tick(self, now: float) -> float:
+        slots = self.p.max_num_seqs - len(self.running)
+        if slots <= 0 or self.sched.waiting() == 0:
+            return 0.0
+        budget = BatchBudget(max_requests=slots,
+                             max_tokens=self.p.max_prefill_tokens,
+                             kv_blocks_free=self.free_blocks,
+                             block_size=self.p.block_size,
+                             pad_mode=self.p.bucket_pad)
+        plan = self.sched.tick(now, budget)
+        if self.drop_fn is not None and plan.requests:
+            live = []
+            for r in plan.requests:
+                if self.drop_fn(r, now):
+                    r.state = RequestState.FAILED
+                    r.finish_time = now
+                    self.dropped.append(r)
+                else:
+                    live.append(r)
+            plan.requests = live
+            plan.total_tokens = sum(int(r.prompt_len) for r in live)
+        if not plan.requests:
+            return 0.0
+        batch_tokens = plan.total_tokens
+        padded = max(plan.padded_tokens if self.p.bucket_pad else batch_tokens,
+                     batch_tokens)
+        mean_ctx = batch_tokens / len(plan.requests)
+        dt = self.cost.prefill_step_time(padded, mean_ctx) / max(self.speed,
+                                                                 1e-6)
+        end = now + dt
+        for r in plan.requests:
+            r.state = RequestState.RUNNING_DECODE
+            r.first_token_time = end
+            r.generated = 1
+            kv = int(r.prompt_len) + 1
+            rem = max(r.max_new_tokens - 1, 0)
+            if self.role == "prefill":
+                # Disaggregation: the KV moves to a decode replica.
+                self.served += 1
+                if rem == 0:
+                    self._finish(r, end)
+                else:
+                    self.outbox.append(KVHandoff(
+                        req=r, kv_tokens=kv, src_replica=self.replica_id,
+                        kv_bytes=kv * self.cost.model.kv_bytes_per_token))
+            elif rem == 0:
+                self._finish(r, end)
+            else:
+                self.free_blocks -= self._blocks_for(kv)
+                self.running.append(_Running(r, kv, rem))
+        return dt
+
+    def _decode_tick(self, now: float) -> float:
+        dt = 0.0
+        for _ in range(self.p.decode_steps_per_tick):
+            if not self.running:
+                break
+            need = sum(1 for rr in self.running
+                       if (rr.kv_tokens % self.p.block_size) == 0)
+            while need > self.free_blocks and len(self.running) > 1:
+                victim = self.running.pop()          # LIFO recompute
+                self.free_blocks += self._blocks_for(victim.kv_tokens)
+                victim.req.state = RequestState.PREEMPTED
+                victim.req.preemptions += 1
+                victim.req.generated = 0
+                victim.req.first_token_time = None
+                self.preemptions += 1
+                if self.role == "decode":
+                    self.evicted.append(victim.req)  # needs a prefill replica
+                else:
+                    self.sched.submit(victim.req, now + dt)
+                need = sum(1 for rr in self.running
+                           if (rr.kv_tokens % self.p.block_size) == 0)
+            total_kv = sum(rr.kv_tokens for rr in self.running)
+            step = self.cost.decode_step_time(len(self.running),
+                                              total_kv) / max(self.speed, 1e-6)
+            dt += step
+            done = []
+            for i, rr in enumerate(self.running):
+                if rr.kv_tokens % self.p.block_size == 0:
+                    self.free_blocks -= 1
+                rr.kv_tokens += 1
+                rr.req.generated += 1
+                rr.remaining -= 1
+                if rr.remaining <= 0:
+                    done.append(i)
+            for i in reversed(done):
+                rr = self.running.pop(i)
+                self.free_blocks += self._blocks_for(rr.kv_tokens)
+                self._finish(rr.req, now + dt)
+        return dt
+
+    def _finish(self, req: Request, t: float) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = t
+        self.finished.append(req)
+        if self.role != "prefill":
+            self.served += 1
+        self.sched.on_finish(req, t)

@@ -1,0 +1,150 @@
+"""Pluggable multi-replica routing policies.
+
+The router is the request-level layer *above* the per-replica schedulers
+(the paper positions EWSJF upstream of execution-level scheduling; Bari et
+al. show routing and scheduling must be analyzed jointly).  Three policies:
+
+  * ``RoundRobinRouter``  — cycles over schedulable replicas (the usual
+    load-balancer default, blind to backlog and heterogeneity);
+  * ``LeastLoadedRouter`` — join-the-shortest-queue on a coarse work
+    estimate (queued prefill seconds + in-flight decode residual, scaled by
+    replica speed) — uses scheduler *totals* only;
+  * ``EWSJFRouter``       — EWSJF-aware: reads each replica's
+    ``SchedulerSnapshot`` (queue structure + density-weighted head scores)
+    and estimates the *marginal start delay this request would see there*:
+    FIFO work ahead of it in its own interval queue, plus score-weighted
+    contention from competing queues, plus executor residual and a KV
+    pressure penalty.  Short requests therefore avoid replicas whose short
+    queue is deep or whose long-queue heads have accumulated urgency —
+    interference the totals-only policies cannot see.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..core.cost_model import CostModel
+from .replica import ReplicaModel
+
+
+class Router:
+    """Base router: pick a prefill-capable replica for a new request, and a
+    decode replica for a KV handoff."""
+
+    name = "base"
+
+    def select(self, replicas: Sequence[ReplicaModel], req,
+               now: float) -> Optional[ReplicaModel]:
+        raise NotImplementedError
+
+    def select_decode(self, replicas: Sequence[ReplicaModel], handoff,
+                      now: float) -> Optional[ReplicaModel]:
+        """Decode-pool placement for a handoff: least KV-pressure, then
+        least in-flight (shared by all policies — decode placement is a
+        memory-balancing problem, not a queueing one)."""
+        pool = [r for r in replicas if r.accepts_decode()]
+        if not pool:
+            return None
+        return min(pool, key=lambda r: (r.kv_occupancy(),
+                                        r.inflight() + len(r.inbox),
+                                        r.replica_id))
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._i = 0
+
+    def select(self, replicas, req, now):
+        pool = [r for r in replicas if r.accepts_prefill()]
+        if not pool:
+            return None
+        r = pool[self._i % len(pool)]
+        self._i += 1
+        return r
+
+
+class LeastLoadedRouter(Router):
+    name = "least_loaded"
+
+    def select(self, replicas, req, now):
+        pool = [r for r in replicas if r.accepts_prefill()]
+        if not pool:
+            return None
+        return min(pool, key=lambda r: (r.exec_residual(now)
+                                        + r.backlog_cost(now), r.replica_id))
+
+
+class EWSJFRouter(Router):
+    name = "ewsjf"
+
+    def __init__(self, cost: CostModel | None = None,
+                 kv_pressure_knee: float = 0.8,
+                 kv_pressure_slope: float = 5.0,
+                 contention_horizon: int = 8):
+        self.cost = cost or CostModel()
+        self.kv_pressure_knee = kv_pressure_knee
+        self.kv_pressure_slope = kv_pressure_slope
+        # how many waiting requests per competing queue are assumed to run
+        # before our queue's head gets picked (bounded lookahead)
+        self.contention_horizon = contention_horizon
+
+    def select(self, replicas, req, now):
+        pool = [r for r in replicas if r.accepts_prefill()]
+        if not pool:
+            return None
+        return min(pool, key=lambda r: (self.route_cost(r, req, now),
+                                        r.replica_id))
+
+    def route_cost(self, replica: ReplicaModel, req, now: float) -> float:
+        """Estimated start delay for ``req`` if routed to ``replica``."""
+        L = float(req.prompt_len)
+        snap = replica.scheduler_snapshot(now)
+        mine = snap.queue_for(L)
+
+        # 1) FIFO work ahead of us inside our own interval queue.
+        ahead = 0.0
+        if mine is not None and mine.depth:
+            ahead = mine.depth * self.cost.c_prefill(max(mine.mean_len, 1.0))
+
+        # 2) Cross-queue contention, weighted by the density scores the
+        #    per-replica EWSJF scheduler will actually arbitrate with: a
+        #    competing queue whose head outscores ours drains first.
+        contention = 0.0
+        my_head_score = mine.head_score if mine is not None else 0.0
+        for q in snap.queues:
+            if mine is not None and q.queue_id == mine.queue_id:
+                continue
+            if q.depth == 0:
+                continue
+            share = q.head_score / (q.head_score + my_head_score + 1e-9)
+            n = min(q.depth, self.contention_horizon)
+            contention += share * n * self.cost.c_prefill(max(q.mean_len, 1.0))
+
+        # 3) Executor state: residual of the running step + decode drag.
+        resid = replica.exec_residual(now)
+        decode_drag = replica.inflight() * self.cost.decode_step_time(
+            max(replica.inflight(), 1),
+            max(replica.inflight(), 1) * max(L, 1.0))
+
+        delay = (ahead + contention) / max(replica.speed, 1e-6) + resid \
+            + decode_drag
+        # 4) KV pressure penalty: a nearly-full pool means admission stalls
+        #    and preemption churn.
+        occ = replica.kv_occupancy()
+        if occ > self.kv_pressure_knee:
+            delay *= 1.0 + self.kv_pressure_slope * (occ - self.kv_pressure_knee)
+            delay += occ * 1e-3
+        return delay
+
+
+def make_router(name: str, cost: CostModel | None = None) -> Router:
+    if name in ("rr", "round_robin"):
+        return RoundRobinRouter()
+    if name in ("ll", "least_loaded"):
+        return LeastLoadedRouter()
+    if name == "ewsjf":
+        return EWSJFRouter(cost=cost)
+    raise ValueError(f"unknown router '{name}'; "
+                     f"have round_robin, least_loaded, ewsjf")

@@ -1,0 +1,313 @@
+"""Cluster-level discrete-event simulator.
+
+Drives N ``ReplicaModel``s (each with its own scheduler + cost-model
+executor, see replica.py) under a ``Router`` policy, optional SLO
+``AdmissionController``, disaggregated prefill/decode handoffs, and a
+scripted scenario (failures, scale-up, speed changes) — all on CPU using
+the same step-cost machinery as ``core/simulator.py``, so every number is
+comparable "simulator units".
+
+Event loop per iteration:
+
+  arrivals → (admission shed?) → router → replica.submit
+  health check → failures re-enqueued, stragglers drained+re-routed
+  handoff movement (prefill outbox → channel → decode inbox)
+  evictions from decode replicas re-routed (recompute needs a prefill pool)
+  ready replicas step (one engine tick each, advancing their busy_until)
+  global clock jumps to the next event
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from ..core.cost_model import CostModel
+from ..core.scheduler import BaseScheduler, FCFSScheduler
+from ..core.types import Request, RequestState
+from .admission import AdmissionController
+from .disagg import HandoffChannel
+from .health import HealthConfig, HealthMonitor
+from .replica import ReplicaModel, ReplicaParams
+from .router import EWSJFRouter, Router
+
+
+@dataclass
+class ScenarioEvent:
+    """Scripted control-plane event: ``action`` in {fail, drain, add_replica,
+    set_speed}."""
+
+    time: float
+    action: str
+    replica_id: int = -1
+    speed: float = 1.0
+    role: str = "unified"
+    scheduler_factory: Optional[Callable[[], BaseScheduler]] = None
+
+
+@dataclass
+class ClusterSimResult:
+    total_time: float
+    finished: list[Request]
+    shed: list[Request]
+    dropped: list[Request]
+    reenqueued: int
+    handoff_stats: dict
+    replica_stats: list[dict]
+    health: dict
+
+    @property
+    def req_per_s(self) -> float:
+        return len(self.finished) / max(self.total_time, 1e-9)
+
+    @property
+    def tok_per_s(self) -> float:
+        toks = sum(r.generated for r in self.finished)
+        return toks / max(self.total_time, 1e-9)
+
+    def ttft_stats(self, short_threshold: int = 256) -> dict:
+        def s(a):
+            if not len(a):
+                return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+            return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+                    "p95": float(np.percentile(a, 95)),
+                    "p99": float(np.percentile(a, 99))}
+        ttfts = np.asarray([r.ttft for r in self.finished
+                            if r.ttft is not None])
+        short = np.asarray([r.ttft for r in self.finished
+                            if r.ttft is not None
+                            and r.prompt_len <= short_threshold])
+        longs = np.asarray([r.ttft for r in self.finished
+                            if r.ttft is not None
+                            and r.prompt_len > short_threshold])
+        return {"all": s(ttfts), "short": s(short), "long": s(longs)}
+
+
+class ClusterSimulator:
+    def __init__(self, replicas: Sequence[ReplicaModel], router: Router,
+                 cost: CostModel,
+                 admission: Optional[AdmissionController] = None,
+                 channel: Optional[HandoffChannel] = None,
+                 health: HealthConfig | None = None):
+        self.replicas: list[ReplicaModel] = list(replicas)
+        self.router = router
+        self.cost = cost
+        self.admission = admission
+        self.channel = channel or HandoffChannel()
+        self.monitor = HealthMonitor(health)
+        self.reenqueued = 0
+        self.shed: list[Request] = []
+        self.backlog: list[Request] = []     # admitted but unroutable (yet)
+        self.now = 0.0
+        if admission is not None:
+            for rep in self.replicas:
+                rep.drop_fn = admission.expired
+
+    # ---- membership -------------------------------------------------------
+
+    def add_replica(self, scheduler: BaseScheduler, role: str = "unified",
+                    speed: float = 1.0,
+                    params: ReplicaParams | None = None) -> ReplicaModel:
+        rid = 1 + max((r.replica_id for r in self.replicas), default=-1)
+        rep = ReplicaModel(rid, self.cost, scheduler=scheduler, params=params,
+                           role=role, speed=speed)
+        rep.last_heartbeat = self.now
+        if self.admission is not None:
+            rep.drop_fn = self.admission.expired
+        self.replicas.append(rep)
+        return rep
+
+    def replica(self, replica_id: int) -> ReplicaModel:
+        return next(r for r in self.replicas if r.replica_id == replica_id)
+
+    # ---- ingestion --------------------------------------------------------
+
+    def _est_best_delay(self, req: Request) -> float:
+        """Best-case start delay across the cluster (for admission)."""
+        pool = [r for r in self.replicas if r.accepts_prefill()]
+        if not pool:
+            return float("inf")
+        if isinstance(self.router, EWSJFRouter):
+            return min(self.router.route_cost(r, req, self.now) for r in pool)
+        return min(r.exec_residual(self.now) + r.backlog_cost(self.now)
+                   for r in pool)
+
+    def ingest(self, req: Request) -> bool:
+        """Admission + routing for one arrival.  Returns False if shed."""
+        if self.admission is not None:
+            dec = self.admission.admit(req, self.now,
+                                       self._est_best_delay(req))
+            if not dec.admitted:
+                req.state = RequestState.FAILED
+                req.finish_time = self.now
+                self.shed.append(req)
+                return False
+        self._route(req)
+        return True
+
+    def _route(self, req: Request) -> None:
+        rep = self.router.select(self.replicas, req, self.now)
+        if rep is None:
+            self.backlog.append(req)
+        else:
+            rep.submit(req, self.now)
+
+    # ---- control-plane reactions ------------------------------------------
+
+    def _handle_failure(self, rep: ReplicaModel) -> None:
+        for req in rep.fail():
+            self.reenqueued += 1
+            self._route(req)
+
+    def _handle_drain(self, rep: ReplicaModel) -> None:
+        for req in rep.start_drain():
+            self._route(req)
+
+    def _apply_event(self, ev: ScenarioEvent) -> None:
+        if ev.action == "fail":
+            self._handle_failure(self.replica(ev.replica_id))
+        elif ev.action == "drain":
+            self._handle_drain(self.replica(ev.replica_id))
+        elif ev.action == "set_speed":
+            self.replica(ev.replica_id).speed = ev.speed
+        elif ev.action == "add_replica":
+            factory = ev.scheduler_factory or FCFSScheduler
+            self.add_replica(factory(), role=ev.role, speed=ev.speed)
+        else:
+            raise ValueError(f"unknown scenario action {ev.action!r}")
+
+    def _move_handoffs(self) -> None:
+        decode_capable = any(r.accepts_decode() for r in self.replicas)
+        for rep in self.replicas:
+            # With no decode-capable replica anywhere, re-routing a handoff
+            # would just re-prefill it forever; park it in the outbox until
+            # one joins (e.g. scale-up) — the KV is already computed.
+            while rep.outbox and decode_capable:
+                h = rep.outbox.pop(0)
+                dst = self.router.select_decode(self.replicas, h, self.now)
+                self.channel.send(h, self.now, dst.replica_id)
+                dst.accept_handoff(h, self.now)
+            while rep.evicted:
+                self._route(rep.evicted.pop(0))
+
+    # ---- main loop ---------------------------------------------------------
+
+    def run(self, requests: list[Request],
+            scenario: Sequence[ScenarioEvent] = (),
+            max_sim_time: float = 1e7) -> ClusterSimResult:
+        arrivals = sorted(requests, key=lambda r: r.arrival_time)
+        events = sorted(scenario, key=lambda e: e.time)
+        ai = ei = 0
+        n_total = len(arrivals)
+        t = self.now
+
+        def accounted() -> int:
+            fin = sum(len(r.finished) for r in self.replicas)
+            drp = sum(len(r.dropped) for r in self.replicas)
+            return fin + drp + len(self.shed)
+
+        guard = 0
+        while accounted() < n_total and t < max_sim_time:
+            guard += 1
+            if guard > 50 * n_total + 10_000:
+                break                                  # safety valve
+            self.now = t
+            while ei < len(events) and events[ei].time <= t:
+                self._apply_event(events[ei])
+                ei += 1
+            while ai < n_total and arrivals[ai].arrival_time <= t:
+                self.ingest(arrivals[ai])
+                ai += 1
+            if self.backlog:
+                still = []
+                for req in self.backlog:
+                    rep = self.router.select(self.replicas, req, t)
+                    if rep is None:
+                        still.append(req)
+                    else:
+                        rep.submit(req, t)
+                self.backlog = still
+            if self.monitor.due(t):
+                dead, drain = self.monitor.check(self.replicas, t)
+                for rep in dead:
+                    self._handle_failure(rep)
+                for rep in drain:
+                    self._handle_drain(rep)
+            self._move_handoffs()
+
+            stepped = False
+            for rep in self.replicas:
+                if rep.alive and rep.busy_until <= t and rep.has_work():
+                    dt = rep.step(t)
+                    rep.busy_until = t + dt
+                    stepped = True
+            self._move_handoffs()
+
+            # advance the clock to the next event
+            nxt = []
+            if ai < n_total:
+                nxt.append(arrivals[ai].arrival_time)
+            if ei < len(events):
+                nxt.append(events[ei].time)
+            nxt.extend(rep.busy_until for rep in self.replicas
+                       if rep.alive and rep.busy_until > t
+                       and (rep.has_work() or rep.inflight()))
+            pending_inbox = any(h.ready_time > t for rep in self.replicas
+                                for h in rep.inbox)
+            if pending_inbox:
+                nxt.append(min(h.ready_time for rep in self.replicas
+                               for h in rep.inbox if h.ready_time > t))
+            if self.monitor.due(t) or self.backlog:
+                nxt.append(t + self.monitor.cfg.check_interval)
+            if nxt:
+                t = max(t + 1e-9, min(nxt))
+            elif not stepped:
+                if ai >= n_total and self._in_system() == 0:
+                    break        # defensive: nothing left anywhere
+                t += self.monitor.cfg.check_interval
+        self.now = t
+
+        finished = [r for rep in self.replicas for r in rep.finished]
+        dropped = [r for rep in self.replicas for r in rep.dropped]
+        return ClusterSimResult(
+            total_time=t, finished=finished, shed=list(self.shed),
+            dropped=dropped, reenqueued=self.reenqueued,
+            handoff_stats=self.channel.stats(),
+            replica_stats=[self._replica_stat(rep) for rep in self.replicas],
+            health={"failures": list(self.monitor.failures),
+                    "stragglers": list(self.monitor.stragglers)})
+
+    def _in_system(self) -> int:
+        return sum(rep.sched.waiting() + rep.inflight() + len(rep.inbox)
+                   + len(rep.outbox) for rep in self.replicas) \
+            + len(self.backlog)
+
+    def _replica_stat(self, rep: ReplicaModel) -> dict:
+        return {"replica_id": rep.replica_id, "role": rep.role,
+                "speed": rep.speed, "alive": rep.alive,
+                "draining": rep.draining, "served": rep.served,
+                "preemptions": rep.preemptions, "ticks": rep.ticks,
+                "busy_time": rep.busy_time,
+                "kv_occupancy": rep.kv_occupancy()}
+
+
+def run_router_comparison(make_replicas: Callable[[], list[ReplicaModel]],
+                          routers: dict[str, Router],
+                          workload: list[Request], cost: CostModel,
+                          scenario: Sequence[ScenarioEvent] = (),
+                          admission_factory: Optional[
+                              Callable[[], AdmissionController]] = None,
+                          ) -> dict[str, ClusterSimResult]:
+    """Run the same workload through several routers over fresh replica
+    fleets (deep-copied requests each time, mirroring core.run_comparison)."""
+    out = {}
+    for name, router in routers.items():
+        reqs = copy.deepcopy(workload)
+        sim = ClusterSimulator(
+            make_replicas(), router, cost,
+            admission=admission_factory() if admission_factory else None)
+        out[name] = sim.run(reqs, scenario=copy.deepcopy(list(scenario)))
+    return out

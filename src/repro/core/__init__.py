@@ -21,8 +21,9 @@ from .scheduler import (BaseScheduler, EWSJFConfig, EWSJFScheduler,
 from .scoring import QueueProfile, compute_score, score_decomposition, weights_for_queue
 from .simulator import (EngineParams, ServingSimulator, SimResult,
                         WorkloadSpec, run_comparison, uniform_workload)
-from .types import (BatchPlan, MetaParams, QueueBounds, Request, RequestState,
-                    SchedulerPolicy, ScoringWeights)
+from .types import (BatchPlan, MetaParams, QueueBounds, QueueSnapshot,
+                    Request, RequestState, SchedulerPolicy, SchedulerSnapshot,
+                    ScoringWeights)
 
 __all__ = [
     "BatchBudget", "BatchBuilder", "DEFAULT_BUCKETS",
@@ -37,6 +38,6 @@ __all__ = [
     "QueueProfile", "compute_score", "score_decomposition", "weights_for_queue",
     "EngineParams", "ServingSimulator", "SimResult", "WorkloadSpec",
     "run_comparison", "uniform_workload",
-    "BatchPlan", "MetaParams", "QueueBounds", "Request", "RequestState",
-    "SchedulerPolicy", "ScoringWeights",
+    "BatchPlan", "MetaParams", "QueueBounds", "QueueSnapshot", "Request",
+    "RequestState", "SchedulerPolicy", "SchedulerSnapshot", "ScoringWeights",
 ]

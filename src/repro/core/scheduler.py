@@ -24,7 +24,8 @@ from .monitor import Monitor, RewardWeights, WindowStats, reward, reward_terms
 from .partition import PartitionConfig, kmeans_partition, refine_and_prune
 from .queues import QueueManager
 from .scoring import compute_score
-from .types import BatchPlan, MetaParams, QueueBounds, Request, SchedulerPolicy
+from .types import (BatchPlan, MetaParams, QueueBounds, QueueSnapshot,
+                    Request, SchedulerPolicy, SchedulerSnapshot)
 
 
 class BaseScheduler:
@@ -42,6 +43,21 @@ class BaseScheduler:
         pass
 
     def waiting(self) -> int:
+        raise NotImplementedError
+
+    def snapshot(self, now: float) -> SchedulerSnapshot:
+        """Introspection view for cluster-level routing (queue structure +
+        head scores).  The default reports totals only (`waiting()`, no
+        per-queue structure) so any policy stays routable; subclasses
+        should override with real structure — FCFSScheduler reports one
+        pseudo-queue spanning [0, inf), EWSJFScheduler its live partition."""
+        return SchedulerSnapshot(policy=self.name, waiting=self.waiting(),
+                                 waiting_tokens=0, queues=[])
+
+    def drain(self) -> list[Request]:
+        """Remove and return every waiting request.  Required by the
+        cluster layer for replica failure / straggler re-routing; policies
+        that cannot enumerate their queue cannot be failed over."""
         raise NotImplementedError
 
     def state_dict(self) -> dict:            # checkpointing hook
@@ -91,6 +107,24 @@ class FCFSScheduler(BaseScheduler):
 
     def waiting(self) -> int:
         return len(self.queue)
+
+    def snapshot(self, now: float) -> SchedulerSnapshot:
+        tokens = sum(int(r.prompt_len) for r in self.queue)
+        head = self.queue[0] if self.queue else None
+        mean = tokens / len(self.queue) if self.queue else 0.0
+        q = QueueSnapshot(
+            queue_id=0, index=0, lo=0.0, hi=float("inf"),
+            depth=len(self.queue), tokens=tokens, mean_len=mean,
+            head_len=float(head.prompt_len) if head else None,
+            head_wait=head.wait_time(now) if head else 0.0,
+            # FIFO has no density weighting: the head's "score" is its wait.
+            head_score=head.wait_time(now) if head else 0.0)
+        return SchedulerSnapshot(policy=self.name, waiting=len(self.queue),
+                                 waiting_tokens=tokens, queues=[q])
+
+    def drain(self) -> list[Request]:
+        out, self.queue = self.queue, []
+        return out
 
 
 class SJFScheduler(FCFSScheduler):
@@ -188,6 +222,34 @@ class EWSJFScheduler(BaseScheduler):
 
     def waiting(self) -> int:
         return self.manager.waiting_count()
+
+    def snapshot(self, now: float) -> SchedulerSnapshot:
+        profiles = self.manager.profiles()
+        queues: list[QueueSnapshot] = []
+        total_reqs = 0
+        total_tokens = 0
+        for i, q in enumerate(self.manager.queues):
+            tokens = sum(int(r.prompt_len) for r in q.requests)
+            head = q.peek()
+            queues.append(QueueSnapshot(
+                queue_id=q.queue_id, index=i,
+                lo=q.bounds.lo, hi=q.bounds.hi,
+                depth=len(q), tokens=tokens, mean_len=q.mean_len,
+                head_len=float(head.prompt_len) if head else None,
+                head_wait=head.wait_time(now) if head else 0.0,
+                head_score=(compute_score(head, profiles[q.queue_id], now,
+                                          self.c_prefill) if head else 0.0)))
+            total_reqs += len(q)
+            total_tokens += tokens
+        return SchedulerSnapshot(policy=self.name, waiting=total_reqs,
+                                 waiting_tokens=total_tokens, queues=queues)
+
+    def drain(self) -> list[Request]:
+        out: list[Request] = []
+        for q in self.manager.queues:
+            out.extend(q.requests)
+            q.requests.clear()
+        return out
 
     # ---- tactical loop (Algorithm 1) --------------------------------------
 

@@ -137,6 +137,51 @@ class SchedulerPolicy:
 
 
 @dataclass
+class QueueSnapshot:
+    """Read-only view of one scheduler queue, exported for cluster routing
+    (the router must see queue *structure*, not just totals)."""
+
+    queue_id: int
+    index: int                      # position in ascending-length order
+    lo: float
+    hi: float
+    depth: int                      # waiting requests
+    tokens: int                     # waiting prompt tokens
+    mean_len: float                 # b̄_q
+    head_len: Optional[float] = None
+    head_wait: float = 0.0
+    head_score: float = 0.0         # density-weighted score of the head
+
+    def contains(self, length: float) -> bool:
+        return self.lo <= length < self.hi or (
+            self.hi == float("inf") and length >= self.lo)
+
+
+@dataclass
+class SchedulerSnapshot:
+    """Cheap introspection view of a BaseScheduler, consumed by cluster-level
+    routers.  Totals (`waiting`, `waiting_tokens`) support least-loaded
+    policies; the per-queue list supports EWSJF-aware routing."""
+
+    policy: str
+    waiting: int
+    waiting_tokens: int
+    queues: list["QueueSnapshot"] = field(default_factory=list)
+
+    def queue_for(self, length: float) -> Optional["QueueSnapshot"]:
+        """The queue a request of ``length`` would route into (interval
+        containment; falls back to the nearest queue by center)."""
+        for q in self.queues:
+            if q.contains(length):
+                return q
+        if not self.queues:
+            return None
+        return min(self.queues,
+                   key=lambda q: abs(0.5 * (q.lo + min(q.hi, 2 * length))
+                                     - length))
+
+
+@dataclass
 class BatchPlan:
     """What the tactical loop hands the engine for one step (Alg. 1 output)."""
 

@@ -1,51 +1,33 @@
-"""Fault tolerance & elasticity for the multi-pod serving cluster.
+"""Legacy multi-pod controller, migrated onto the ``repro.cluster`` data
+plane.
 
-EWSJF extends naturally to the 1000+-node regime as the *global admission
-layer* (DESIGN.md §3): each pod runs an engine replica; a cluster
-controller routes requests to pods, monitors heartbeats, and reacts to
-failures/stragglers.  On this CPU container the pod engines are simulated
-actors driven by the same cost model as core/simulator.py, but the control
-logic (what a production deployment exercises) is real:
+``ClusterController`` keeps its original control-plane API (global EWSJF
+admission + pod routing + failure handling + checkpointing) but the pods
+are now real ``cluster.ReplicaModel`` executors: each pod runs its own
+discrete-event engine (chunked prefill + multi-step decode over the cost
+model) instead of the old coarse "charge a service time" actor, and health
+detection is the shared ``cluster.HealthMonitor``.
 
-  * heartbeat-based failure detection → in-flight requests of a dead pod
-    are re-enqueued globally (recompute recovery, no KV migration);
-  * straggler mitigation — a pod whose step latency EWMA exceeds
-    ``straggler_factor`` × cluster median is drained: no new admissions,
-    existing work finishes, queued work is re-routed;
-  * elastic scaling — pods can join/leave; the router re-balances by
-    shortest-expected-completion (queue cost / pod speed);
-  * scheduler-state checkpointing — the EWSJF strategic state (partition +
-    Θ trials) is periodically snapshotted so a controller restart resumes
-    with the learned policy instead of re-exploring (tested in
-    tests/test_fault_tolerance.py).
+New code should use ``repro.cluster`` directly — per-replica schedulers,
+pluggable routers, SLO admission, disaggregated prefill/decode.  This
+module remains for the global-admission topology (one EWSJF scheduler in
+front of executor-only pods) and for checkpoint compatibility.
 """
 
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Optional
 
-import numpy as np
-
+from ..cluster.health import HealthConfig, HealthMonitor
+from ..cluster.replica import ReplicaModel, ReplicaParams
 from ..core.batch_builder import BatchBudget
 from ..core.cost_model import CostModel
-from ..core.scheduler import BaseScheduler, EWSJFScheduler
-from ..core.types import Request, RequestState
+from ..core.scheduler import BaseScheduler, FCFSScheduler
 
-
-@dataclass
-class PodState:
-    pod_id: int
-    speed: float = 1.0                 # relative throughput multiplier
-    alive: bool = True
-    draining: bool = False
-    inflight: list = field(default_factory=list)   # requests being served
-    last_heartbeat: float = 0.0
-    step_ewma: float = 0.0             # smoothed step latency
-    busy_until: float = 0.0
-    served: int = 0
+# Legacy alias: PodState is now the full replica executor.
+PodState = ReplicaModel
 
 
 @dataclass
@@ -53,41 +35,60 @@ class ClusterConfig:
     n_pods: int = 2
     heartbeat_timeout: float = 5.0
     straggler_factor: float = 3.0
-    ewma_alpha: float = 0.2
-    max_inflight_per_pod: int = 64
+    ewma_alpha: float = 0.2            # kept for API compat (EWMA lives in
+    max_inflight_per_pod: int = 64     # ReplicaModel now)
     pod_prefill_tokens: int = 8192
 
 
 class ClusterController:
-    """Global EWSJF admission + pod routing + failure handling."""
+    """Global EWSJF admission + pod routing + failure handling (legacy
+    topology: one strategic scheduler, executor-only pods)."""
 
     def __init__(self, scheduler: BaseScheduler, cost: CostModel,
                  ccfg: ClusterConfig | None = None):
         self.sched = scheduler
         self.cost = cost
         self.cfg = ccfg or ClusterConfig()
-        self.pods: dict[int, PodState] = {
-            i: PodState(pod_id=i) for i in range(self.cfg.n_pods)}
-        self.finished: list[Request] = []
-        self.reenqueued = 0
         self.now = 0.0
+        self.finished: list = []
+        self.reenqueued = 0
+        self.pods: dict[int, ReplicaModel] = {}
+        for _ in range(self.cfg.n_pods):
+            self.add_pod()
+        self.monitor = HealthMonitor(HealthConfig(
+            heartbeat_timeout=self.cfg.heartbeat_timeout,
+            straggler_factor=self.cfg.straggler_factor,
+            check_interval=0.0))        # legacy: check on every call
+
+    def _pod_params(self) -> ReplicaParams:
+        return ReplicaParams(max_num_seqs=self.cfg.max_inflight_per_pod,
+                             max_prefill_tokens=self.cfg.pod_prefill_tokens)
 
     # ---- membership / elasticity -----------------------------------------
 
     def add_pod(self, speed: float = 1.0) -> int:
         pid = max(self.pods) + 1 if self.pods else 0
-        self.pods[pid] = PodState(pod_id=pid, speed=speed,
-                                  last_heartbeat=self.now)
+        pod = ReplicaModel(pid, self.cost, scheduler=FCFSScheduler(),
+                           params=self._pod_params(), speed=speed)
+        pod.last_heartbeat = self.now
+        pod.busy_until = self.now
+        self.pods[pid] = pod
         return pid
 
     def remove_pod(self, pod_id: int, graceful: bool = True) -> None:
         pod = self.pods[pod_id]
         if graceful:
-            pod.draining = True
+            for req in pod.start_drain():
+                self.sched.submit(req, now=self.now)
         else:
             self._fail_pod(pod)
 
     # ---- failure handling ---------------------------------------------------
+
+    def _fail_pod(self, pod: ReplicaModel) -> None:
+        for req in pod.fail():
+            self.sched.submit(req, now=self.now)
+            self.reenqueued += 1
 
     def heartbeat(self, pod_id: int, step_latency: float) -> None:
         pod = self.pods[pod_id]
@@ -95,86 +96,68 @@ class ClusterController:
         a = self.cfg.ewma_alpha
         pod.step_ewma = ((1 - a) * pod.step_ewma + a * step_latency
                          if pod.step_ewma else step_latency)
-
-    def _fail_pod(self, pod: PodState) -> None:
-        pod.alive = False
-        for req in pod.inflight:
-            req.state = RequestState.PREEMPTED
-            req.preemptions += 1
-            req.generated = 0
-            req.first_token_time = None
-            self.sched.submit(req, now=self.now)
-            self.reenqueued += 1
-        pod.inflight = []
+        pod.ewma_obs += 1
 
     def check_health(self) -> list[int]:
         """Detect dead + straggler pods. Returns affected pod ids."""
-        affected = []
-        alive = [p for p in self.pods.values() if p.alive]
-        for pod in alive:
-            if self.now - pod.last_heartbeat > self.cfg.heartbeat_timeout:
-                self._fail_pod(pod)
-                affected.append(pod.pod_id)
-        ewmas = [p.step_ewma for p in alive if p.step_ewma > 0 and p.alive]
-        if len(ewmas) >= 2:
-            med = float(np.median(ewmas))
-            for pod in alive:
-                if (pod.alive and not pod.draining and pod.step_ewma
-                        > self.cfg.straggler_factor * med):
-                    pod.draining = True          # straggler: drain
-                    affected.append(pod.pod_id)
-        return affected
+        dead, drain = self.monitor.check(self.pods.values(), self.now)
+        for pod in dead:
+            self._fail_pod(pod)
+        for pod in drain:
+            for req in pod.start_drain():
+                self.sched.submit(req, now=self.now)
+        return [p.replica_id for p in dead + drain]
 
     # ---- routing ----------------------------------------------------------
 
-    def schedulable_pods(self) -> list[PodState]:
+    def schedulable_pods(self) -> list[ReplicaModel]:
         return [p for p in self.pods.values()
-                if p.alive and not p.draining
-                and len(p.inflight) < self.cfg.max_inflight_per_pod]
+                if p.schedulable()
+                and p.inflight() + p.sched.waiting()
+                < self.cfg.max_inflight_per_pod]
 
     def route_step(self) -> int:
-        """One admission round: EWSJF picks the batch, the router places it
-        on the least-loaded schedulable pod.  Returns #requests placed."""
+        """One admission round: the global EWSJF scheduler picks the batch,
+        the router places it on the least-loaded schedulable pod (the pod's
+        own engine then prefils/decodes it under the cost model)."""
         pods = self.schedulable_pods()
         if not pods or self.sched.waiting() == 0:
             return 0
-        pod = min(pods, key=lambda p:
-                  (p.busy_until - self.now) / max(p.speed, 1e-6))
+        # backlog_cost is already speed-adjusted and exec_residual is wall
+        # time — no further /speed (mirrors cluster.LeastLoadedRouter)
+        pod = min(pods, key=lambda p: (
+            p.exec_residual(self.now) + p.backlog_cost(self.now),
+            p.replica_id))
         budget = BatchBudget(
-            max_requests=self.cfg.max_inflight_per_pod - len(pod.inflight),
+            max_requests=self.cfg.max_inflight_per_pod
+            - pod.inflight() - pod.sched.waiting(),
             max_tokens=self.cfg.pod_prefill_tokens)
         plan = self.sched.tick(self.now, budget)
         for req in plan.requests:
-            pod.inflight.append(req)
-            req.state = RequestState.RUNNING_PREFILL
+            pod.submit(req, self.now)
         if plan.requests:
-            # charge the pod with the batch's estimated service time
-            t = sum(self.cost.c_prefill(r.prompt_len)
-                    + r.max_new_tokens * self.cost.decode_step_time(
-                        1, r.prompt_len) for r in plan.requests)
-            pod.busy_until = max(pod.busy_until, self.now) + t / pod.speed
+            pod.busy_until = max(pod.busy_until, self.now)
         return len(plan.requests)
 
     def advance(self, dt: float) -> None:
-        """Advance simulated time; pods complete work that fits."""
+        """Advance simulated time; each pod's engine steps until it catches
+        up with the new clock."""
         self.now += dt
         for pod in self.pods.values():
             if not pod.alive:
                 continue
-            self.heartbeat(pod.pod_id,
+            while pod.alive and pod.has_work() and pod.busy_until <= self.now:
+                step_dt = pod.step(pod.busy_until)
+                pod.busy_until += step_dt
+            # synthetic heartbeat (the legacy controller polls its pods)
+            self.heartbeat(pod.replica_id,
                            step_latency=1.0 / max(pod.speed, 1e-6))
-            if pod.inflight and pod.busy_until <= self.now:
-                for req in pod.inflight:
-                    req.state = RequestState.FINISHED
-                    req.first_token_time = req.first_token_time or self.now
-                    req.finish_time = self.now
-                    req.generated = req.max_new_tokens
-                    self.finished.append(req)
-                    self.sched.on_finish(req, self.now)
-                    pod.served += 1
-                pod.inflight = []
-                if pod.draining:
-                    pod.alive = False
+            for req in pod.finished:
+                self.finished.append(req)
+                # the *global* scheduler owns the strategic loop; feed its
+                # monitor (the pod's local FCFS on_finish is a no-op)
+                self.sched.on_finish(req, self.now)
+            pod.finished.clear()
 
     # ---- scheduler-state checkpointing ---------------------------------------
 

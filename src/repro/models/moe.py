@@ -33,7 +33,7 @@ from .common import dense_init
 try:                                    # jax>=0.6 moved shard_map
     from jax import shard_map as _shard_map_mod  # type: ignore
     shard_map = jax.shard_map
-except AttributeError:                  # pragma: no cover
+except (ImportError, AttributeError):   # older jax: experimental home
     from jax.experimental.shard_map import shard_map
 
 

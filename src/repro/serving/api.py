@@ -27,8 +27,12 @@ _SCHEDULERS = {
 def serve(arch: str, requests: list[Request], *, scheduler: str = "ewsjf",
           smoke: bool = True, params=None,
           engine_config: Optional[EngineConfig] = None,
-          seed: int = 0) -> dict:
-    """Serve ``requests`` to completion; returns {finished, stats, engine}."""
+          admission=None, seed: int = 0) -> dict:
+    """Serve ``requests`` to completion; returns {finished, stats, engine}.
+
+    ``admission`` is an optional replica-facing SLO admission controller
+    (see ``repro.cluster.AdmissionController``): over-budget sheddable
+    requests are refused at ingress and reported in ``stats()['shed']``."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     if params is None:
         params = init_params(jax.random.PRNGKey(seed), cfg)
@@ -36,6 +40,7 @@ def serve(arch: str, requests: list[Request], *, scheduler: str = "ewsjf",
     eng = ServingEngine(cfg, params, sched,
                         engine_config or EngineConfig(
                             max_slots=4, s_max=256, kv_pool_tokens=4096,
-                            buckets=(32, 64, 128, 256)))
+                            buckets=(32, 64, 128, 256)),
+                        admission=admission)
     finished = eng.run(requests)
     return {"finished": finished, "stats": eng.stats(), "engine": eng}

@@ -72,7 +72,8 @@ class _SlotState:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, scheduler: BaseScheduler,
                  ecfg: EngineConfig | None = None,
-                 policy: DtypePolicy | None = None):
+                 policy: DtypePolicy | None = None,
+                 admission=None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -90,6 +91,11 @@ class ServingEngine:
         self.slot_pos = np.zeros(self.e.max_slots, dtype=np.int32)
         self.slot_state: dict[int, _SlotState] = {}
         self.last_tokens = np.zeros((self.e.max_slots, 1), dtype=np.int32)
+        # Replica-facing admission hook (cluster.AdmissionController or any
+        # object with .admit(req, now, est_delay) -> decision.admitted).
+        self.admission = admission
+        self.shed: list[Request] = []
+        self._prefill_tok_rate = 0.0     # EWMA tokens/s, for delay estimates
         self.finished: list[Request] = []
         self.preemptions = 0
         self.prefill_batches = 0
@@ -141,8 +147,24 @@ class ServingEngine:
 
     # ---- main loop ---------------------------------------------------------
 
+    def _est_queue_delay(self, now: float) -> float:
+        """Best-effort TTFT-delay estimate from the current backlog and the
+        measured prefill token rate (0 until the first batch completes)."""
+        if self._prefill_tok_rate <= 0:
+            return 0.0
+        waiting = self.sched.snapshot(now).waiting_tokens
+        return waiting / self._prefill_tok_rate
+
     def add_request(self, req: Request) -> None:
-        self.sched.submit(req, now=self.now())
+        now = self.now()
+        if self.admission is not None:
+            dec = self.admission.admit(req, now, self._est_queue_delay(now))
+            if not dec.admitted:
+                req.state = RequestState.FAILED
+                req.finish_time = now
+                self.shed.append(req)
+                return
+        self.sched.submit(req, now=now)
 
     def run(self, requests: list[Request], max_steps: int = 100_000) -> list[Request]:
         """Serve every request to completion; returns finished requests."""
@@ -154,7 +176,7 @@ class ServingEngine:
             while pi < n_total and pending[pi].arrival_time <= now:
                 self.add_request(pending[pi])
                 pi += 1
-            if len(self.finished) >= n_total:
+            if len(self.finished) + len(self.shed) >= n_total:
                 break
             if hasattr(self.sched, "maybe_reoptimize"):
                 self.sched.maybe_reoptimize(now)
@@ -199,13 +221,22 @@ class ServingEngine:
         self.prefill_batches += 1
         self.padded_tokens += bucket * n
         self.real_tokens += int(lens.sum())
+        fresh_jit = (bucket, n) not in self._prefill_jits
         fn = self._get_prefill_jit(bucket, n)
+        t_pf0 = self.now()
         logits, caches = fn(self.params, jnp.asarray(tokens), jnp.asarray(lens))
         caches = pad_prefill_caches(caches, self.cfg, self.e.s_max)
         self._key, sk = jax.random.split(self._key)
         first = np.asarray(sample_tokens(logits, sk,
                                          temperature=self.e.temperature))
         t_first = self.now()
+        # observed prefill rate feeds the admission delay estimator; skip
+        # first-call-per-shape timings — they include JIT compilation and
+        # would poison the estimate into spurious shedding
+        if not fresh_jit:
+            rate = int(lens.sum()) / max(t_first - t_pf0, 1e-6)
+            self._prefill_tok_rate = (rate if self._prefill_tok_rate <= 0 else
+                                      0.7 * self._prefill_tok_rate + 0.3 * rate)
         for i, r in enumerate(reqs):
             self.pool.allocate(r.request_id, r.prompt_len)
             slot = self.slots.acquire(r.request_id)
@@ -309,6 +340,7 @@ class ServingEngine:
         toks = sum(r.generated for r in self.finished)
         return {
             "finished": len(self.finished),
+            "shed": len(self.shed),
             "elapsed_s": elapsed,
             "tok_per_s": toks / max(elapsed, 1e-9),
             "req_per_s": len(self.finished) / max(elapsed, 1e-9),

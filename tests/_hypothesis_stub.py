@@ -1,0 +1,67 @@
+"""Minimal deterministic fallback for ``hypothesis`` (not installed in the
+benchmark container; the dependency is gated, not required).
+
+Covers exactly what this repo's property tests use: ``st.integers``,
+``st.floats``, ``st.lists``, ``@given``, ``@settings``.  ``@given`` draws
+``max_examples`` pseudo-random examples from a fixed seed, so the property
+tests still exercise many inputs — just without shrinking/replay.
+"""
+
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class st:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+               allow_infinity=False):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+_MAX_EXAMPLES = {"value": 20}
+
+
+def settings(max_examples=20, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        n = getattr(fn, "_max_examples", _MAX_EXAMPLES["value"])
+
+        def wrapper(*args):
+            rng = random.Random(0xE757F)
+            for _ in range(n):
+                pos = tuple(s.example(rng) for s in strategies)
+                kws = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kws)
+        # NOTE: deliberately no functools.wraps — copying __wrapped__ would
+        # make pytest read the original signature and demand fixtures for
+        # the drawn arguments.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,280 @@
+"""Cluster data plane: routing, disaggregation, admission, failure paths."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.cluster import (AdmissionController, ClusterSimulator,
+                           EWSJFRouter, LeastLoadedRouter, ReplicaModel,
+                           ReplicaParams, RoundRobinRouter, ScenarioEvent,
+                           SLOClass, make_fleet, make_router)
+from repro.core import (CostModel, EWSJFConfig, EWSJFScheduler,
+                        FCFSScheduler, Request, WorkloadSpec)
+
+
+def cost_model():
+    return CostModel(mfu=0.15, hbm_eff=0.7)
+
+
+def ewsjf_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=32, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+def small_workload(n=120, rate=15.0, seed=0):
+    return WorkloadSpec(n_requests=n, arrival_rate=rate, seed=seed).generate()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler introspection (the core plug point the routers consume)
+# ---------------------------------------------------------------------------
+
+class TestSnapshot:
+    def test_fcfs_single_pseudo_queue(self):
+        s = FCFSScheduler()
+        s.submit(Request(prompt_len=100, arrival_time=0.0), now=0.0)
+        s.submit(Request(prompt_len=2000, arrival_time=0.0), now=0.0)
+        snap = s.snapshot(now=1.0)
+        assert snap.waiting == 2
+        assert snap.waiting_tokens == 2100
+        assert len(snap.queues) == 1
+        assert snap.queues[0].hi == float("inf")
+        assert snap.queues[0].head_len == 100.0
+
+    def test_ewsjf_snapshot_reflects_queue_structure(self):
+        s = ewsjf_factory()
+        rng = np.random.default_rng(0)
+        for i in range(200):
+            plen = int(rng.integers(32, 256)) if i % 2 else \
+                int(rng.integers(1024, 4096))
+            s.submit(Request(prompt_len=plen, arrival_time=0.0), now=0.0)
+        s.maybe_reoptimize(1.0, force=True)
+        snap = s.snapshot(now=1.0)
+        assert snap.waiting == 200
+        assert len(snap.queues) >= 2            # partitioned
+        # intervals are ascending and cover every waiting request
+        for a, b in zip(snap.queues[:-1], snap.queues[1:]):
+            assert a.lo <= b.lo
+        short_q = snap.queue_for(100.0)
+        long_q = snap.queue_for(3000.0)
+        assert short_q is not None and long_q is not None
+        assert short_q.queue_id != long_q.queue_id
+        # non-empty queues expose a scored head
+        assert any(q.head_score > 0 for q in snap.queues if q.depth)
+
+    def test_drain_empties_scheduler(self):
+        for s in (FCFSScheduler(), ewsjf_factory()):
+            for i in range(10):
+                s.submit(Request(prompt_len=64 + i), now=0.0)
+            out = s.drain()
+            assert len(out) == 10
+            assert s.waiting() == 0
+
+
+# ---------------------------------------------------------------------------
+# Routers
+# ---------------------------------------------------------------------------
+
+class TestRouters:
+    def mk_replicas(self, n=3):
+        cost = cost_model()
+        return [ReplicaModel(i, cost, scheduler=FCFSScheduler())
+                for i in range(n)], cost
+
+    def test_round_robin_cycles(self):
+        reps, cost = self.mk_replicas()
+        r = RoundRobinRouter()
+        picks = [r.select(reps, Request(prompt_len=64), 0.0).replica_id
+                 for _ in range(6)]
+        assert picks == [0, 1, 2, 0, 1, 2]
+
+    def test_least_loaded_avoids_backlog(self):
+        reps, cost = self.mk_replicas()
+        for _ in range(20):
+            reps[0].submit(Request(prompt_len=2048), now=0.0)
+        r = LeastLoadedRouter()
+        assert r.select(reps, Request(prompt_len=64), 0.0).replica_id != 0
+
+    def test_ewsjf_router_sees_queue_structure(self):
+        """A short request should avoid the replica whose *short* interval
+        is congested, even when total backlogs look comparable."""
+        cost = cost_model()
+        reps = [ReplicaModel(i, cost, scheduler=ewsjf_factory())
+                for i in range(2)]
+        rng = np.random.default_rng(0)
+        # replica 0: deep short queue; replica 1: same token mass, all long
+        for _ in range(30):
+            reps[0].submit(Request(prompt_len=int(rng.integers(32, 256)),
+                                   arrival_time=0.0), now=0.0)
+        for _ in range(2):
+            reps[1].submit(Request(prompt_len=2048, arrival_time=0.0),
+                           now=0.0)
+        router = EWSJFRouter(cost=cost)
+        short = Request(prompt_len=64, arrival_time=1.0)
+        c0 = router.route_cost(reps[0], short, 1.0)
+        c1 = router.route_cost(reps[1], short, 1.0)
+        assert c1 < c0
+        assert router.select(reps, short, 1.0).replica_id == 1
+
+    def test_router_skips_unschedulable(self):
+        reps, cost = self.mk_replicas()
+        reps[0].alive = False
+        reps[1].draining = True
+        for r in (RoundRobinRouter(), LeastLoadedRouter(),
+                  EWSJFRouter(cost=cost)):
+            assert r.select(reps, Request(prompt_len=64), 0.0).replica_id == 2
+
+    def test_make_router(self):
+        assert make_router("rr").name == "round_robin"
+        assert make_router("least_loaded").name == "least_loaded"
+        assert make_router("ewsjf").name == "ewsjf"
+        with pytest.raises(ValueError):
+            make_router("nope")
+
+
+# ---------------------------------------------------------------------------
+# Cluster failure paths (hard-fail re-enqueue, straggler drain, scale-up)
+# ---------------------------------------------------------------------------
+
+class TestFailurePaths:
+    def test_hard_fail_reenqueues_and_completes(self):
+        cost = cost_model()
+        fleet = make_fleet(3, cost, scheduler_factory=ewsjf_factory)
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost)
+        wl = small_workload(120)
+        res = sim.run(wl, scenario=[ScenarioEvent(time=1.0, action="fail",
+                                                 replica_id=0)])
+        assert len(res.finished) == 120           # nothing lost
+        assert res.reenqueued > 0                 # recovery actually happened
+        assert not sim.replica(0).alive
+        assert sum(r.alive for r in sim.replicas) == 2
+
+    def test_straggler_drained_and_work_rerouted(self):
+        cost = cost_model()
+        fleet = make_fleet(4, cost, scheduler_factory=ewsjf_factory,
+                           speeds=[1.0, 1.0, 1.0, 0.05])
+        sim = ClusterSimulator(fleet, make_router("round_robin", cost), cost)
+        res = sim.run(small_workload(120))
+        assert len(res.finished) == 120
+        straggler = sim.replica(3)
+        assert straggler.draining or not straggler.alive
+        assert 3 in res.health["stragglers"]
+
+    def test_elastic_scale_up_absorbs_load(self):
+        cost = cost_model()
+        fleet = make_fleet(1, cost, scheduler_factory=ewsjf_factory)
+        sim = ClusterSimulator(fleet, make_router("least_loaded", cost), cost)
+        wl = small_workload(200, rate=40.0)
+        res = sim.run(wl, scenario=[
+            ScenarioEvent(time=0.5, action="add_replica",
+                          scheduler_factory=ewsjf_factory),
+            ScenarioEvent(time=0.5, action="add_replica",
+                          scheduler_factory=ewsjf_factory)])
+        assert len(res.finished) == 200
+        assert len(sim.replicas) == 3
+        served = [s["served"] for s in res.replica_stats]
+        assert sum(s > 0 for s in served) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated prefill/decode
+# ---------------------------------------------------------------------------
+
+class TestDisaggregation:
+    def test_handoffs_accounted_and_complete(self):
+        cost = cost_model()
+        fleet = make_fleet(4, cost, scheduler_factory=ewsjf_factory,
+                           roles=["prefill", "prefill", "decode", "decode"])
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost)
+        wl = small_workload(120)
+        res = sim.run(wl)
+        assert len(res.finished) == 120
+        multi_tok = sum(1 for r in wl if r.max_new_tokens > 1)
+        assert res.handoff_stats["handoffs"] >= multi_tok > 0
+        assert res.handoff_stats["total_gb"] > 0
+        assert res.handoff_stats["mean_transfer_ms"] > 0
+        # decode happened on the decode pool
+        decode_served = sum(s["served"] for s in res.replica_stats
+                            if s["role"] == "decode")
+        assert decode_served >= multi_tok
+
+    def test_ttft_set_at_prefill(self):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory,
+                           roles=["prefill", "decode"])
+        sim = ClusterSimulator(fleet, make_router("least_loaded", cost), cost)
+        res = sim.run(small_workload(40))
+        assert all(r.ttft is not None and r.ttft >= 0 for r in res.finished)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission control
+# ---------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_sheds_sheddable_class_under_overload(self):
+        cost = cost_model()
+        fleet = make_fleet(1, cost, scheduler_factory=ewsjf_factory)
+        adm = AdmissionController(shed_factor=1.0)
+        sim = ClusterSimulator(fleet, make_router("least_loaded", cost), cost,
+                               admission=adm)
+        # heavy overload: one replica, high rate, long prompts
+        wl = WorkloadSpec(n_requests=300, arrival_rate=120.0,
+                          short_frac=0.5).generate()
+        res = sim.run(wl)
+        assert len(res.shed) > 0
+        assert adm.stats()["shed"]["batch"] > 0
+        # interactive class is not sheddable
+        assert adm.stats()["shed"]["interactive"] == 0
+        assert len(res.finished) + len(res.shed) + len(res.dropped) == 300
+
+    def test_deadline_drop_at_dispatch(self):
+        cost = cost_model()
+        classes = (SLOClass("interactive", ttft_target=1.0, deadline=0.05,
+                            priority=2, sheddable=False),
+                   SLOClass("standard", ttft_target=5.0, deadline=60.0),
+                   SLOClass("batch", ttft_target=60.0, deadline=None))
+        adm = AdmissionController(classes=classes, shed_factor=1e9)
+        fleet = make_fleet(1, cost, scheduler_factory=ewsjf_factory)
+        sim = ClusterSimulator(fleet, make_router("least_loaded", cost), cost,
+                               admission=adm)
+        wl = WorkloadSpec(n_requests=200, arrival_rate=200.0).generate()
+        res = sim.run(wl)
+        # with a 50 ms deadline under burst load, some interactive requests
+        # age out while queued and are dropped at dispatch
+        assert len(res.dropped) > 0
+        assert adm.stats()["dropped"]["interactive"] == len(res.dropped)
+        assert len(res.finished) + len(res.shed) + len(res.dropped) == 200
+
+    def test_admission_controller_classify_override(self):
+        adm = AdmissionController()
+        req = Request(prompt_len=5000, priority_class=0)
+        assert adm.slo_of(req).name == "batch"
+        req_short = Request(prompt_len=64)
+        assert adm.slo_of(req_short).name == "interactive"
+        dec = adm.admit(req_short, 0.0, est_delay=1e9)
+        assert dec.admitted                       # interactive never shed
+
+
+# ---------------------------------------------------------------------------
+# Router comparison harness (what the benchmark drives)
+# ---------------------------------------------------------------------------
+
+def test_router_comparison_improves_short_ttft():
+    from repro.cluster import run_router_comparison
+    cost = cost_model()
+    wl = small_workload(150)
+
+    def mk():
+        return make_fleet(4, cost, scheduler_factory=ewsjf_factory)
+
+    out = run_router_comparison(
+        mk, {"rr": make_router("rr"), "ewsjf": make_router("ewsjf", cost)},
+        wl, cost)
+    assert set(out) == {"rr", "ewsjf"}
+    for res in out.values():
+        assert len(res.finished) == 150
+    s_rr = out["rr"].ttft_stats()["short"]["mean"]
+    s_ew = out["ewsjf"].ttft_stats()["short"]["mean"]
+    assert s_ew <= s_rr

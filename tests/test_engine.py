@@ -76,6 +76,44 @@ def test_engine_outputs_independent_of_scheduler(model):
     assert outs["fcfs"] == outs["ewsjf"]
 
 
+def test_engine_admission_hook_sheds(model):
+    """Replica-facing admission: once the prefill-rate estimator is primed,
+    an over-budget sheddable request is refused at ingress."""
+    from repro.cluster import AdmissionController, SLOClass
+    cfg, params = model
+    classes = (SLOClass("interactive", ttft_target=1e9, deadline=None,
+                        priority=2, sheddable=False),
+               SLOClass("standard", ttft_target=5.0, deadline=None),
+               SLOClass("batch", ttft_target=1e-12, deadline=None))
+    adm = AdmissionController(
+        classes=classes,
+        classify=lambda r: "batch" if r.prompt_len > 64 else "interactive")
+    eng = ServingEngine(cfg, params, FCFSScheduler(),
+                        EngineConfig(max_slots=4, s_max=256,
+                                     kv_pool_tokens=4096,
+                                     buckets=(32, 64, 128, 256)),
+                        admission=adm)
+    # prime the rate estimator: same prompt length twice over full slots so
+    # the second batch reuses the compiled shape (fresh-JIT timings are
+    # excluded from the rate — they'd count compilation as serving time)
+    prime = [Request(prompt_len=16, arrival_time=0.0, max_new_tokens=2)
+             for _ in range(8)]
+    eng.run(prime, max_steps=2000)
+    assert eng._prefill_tok_rate > 0
+    # now a long sheddable request with backlogged queue gets refused
+    eng.sched.submit(Request(prompt_len=200, arrival_time=0.0,
+                             max_new_tokens=2), now=eng.now())
+    long_req = Request(prompt_len=200, arrival_time=0.0, max_new_tokens=2)
+    eng.add_request(long_req)
+    assert long_req in eng.shed
+    assert adm.stats()["shed"]["batch"] == 1
+    # non-sheddable interactive traffic is still admitted
+    short_req = Request(prompt_len=16, arrival_time=0.0, max_new_tokens=2)
+    eng.add_request(short_req)
+    assert short_req not in eng.shed
+    assert eng.stats()["shed"] == 1
+
+
 def test_engine_preemption_requeues(model):
     cfg, params = model
     eng = ServingEngine(cfg, params, FCFSScheduler(),

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (PartitionConfig, kmeans_partition, refine_and_prune,
                         static_partition, validate_partition)

@@ -98,7 +98,12 @@ class TestDryRunSmoke:
                     assert compiled.cost_analysis() is not None
                     print("OK", arch, shape)
         """)
+        import os
+        from pathlib import Path
+        src = str(Path(__file__).resolve().parents[1] / "src")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
         r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                           text=True, timeout=420)
+                           text=True, timeout=420, env=env)
         assert r.returncode == 0, r.stderr[-2000:]
         assert r.stdout.count("OK") == 4
