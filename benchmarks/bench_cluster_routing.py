@@ -6,17 +6,30 @@ shapes:
   * straggler — one replica at 0.25x speed (health monitor may drain it);
   * disagg    — 2 prefill + 2 decode replicas with KV handoffs over ICI.
 
-Claim checked inline: the EWSJF-aware router improves *short-request mean
-TTFT* over round-robin on every scenario without giving up more than 5%
-total token throughput.  Each replica runs its own EWSJF scheduler; only
-the cluster-level routing policy varies.
+Claims checked inline:
+
+  * the EWSJF-aware router improves *short-request mean TTFT* over
+    round-robin on every scenario without giving up more than 5% total
+    token throughput;
+  * the incremental router state cache (PR 2) cuts per-arrival routing
+    cost ≥ 5x vs the rebuild-per-arrival path at *identical* routing
+    decisions (control-plane overhead section).
+
+CLI:  ``python -m benchmarks.bench_cluster_routing [--quick] [--json PATH]``
+— ``--quick`` runs a CI-sized workload; ``--json`` writes the results
+(TTFT / throughput / overhead) as a machine-readable artifact
+(``BENCH_cluster.json`` in CI) for the perf trajectory.
 """
 
 from __future__ import annotations
 
+import argparse
+import copy
+import json
 import time
 
-from repro.cluster import make_fleet, make_router, run_router_comparison
+from repro.cluster import (EWSJFRouter, make_fleet, make_router,
+                           run_router_comparison)
 from repro.core import EWSJFConfig, EWSJFScheduler, WorkloadSpec
 
 from .common import SCALE, cost_model, emit
@@ -42,10 +55,63 @@ def _fleet_factory(scenario: str, cost):
                               **kw)
 
 
-def main() -> None:
+def measure_routing_overhead(cost, n_replicas: int = 4, waiting: int = 400,
+                             probes: int = 200, repeats: int = 3) -> dict:
+    """Per-arrival routing cost: cached (incremental snapshots + cost memo,
+    event-driven invalidation) vs fresh (full snapshot rebuild per arrival,
+    the PR-1 path), on an identical loaded fleet with identical arrival
+    replay.  Decisions must match exactly.  Best-of-``repeats`` wall time
+    per mode — the cached path is short enough that a single pass is at
+    the mercy of scheduler jitter on a shared CI box."""
+    warm = WorkloadSpec(n_requests=waiting * n_replicas, arrival_rate=1e4,
+                        seed=2).generate()
+    arrivals = WorkloadSpec(n_requests=probes, arrival_rate=50.0,
+                            seed=3).generate()
+    for a in arrivals:
+        a.arrival_time += 1.5
+
+    def run(use_cache: bool):
+        fleet = [r for r in make_fleet(n_replicas, cost,
+                                       scheduler_factory=_scheduler_factory)]
+        for i, req in enumerate(warm):
+            fleet[i % n_replicas].submit(copy.deepcopy(req),
+                                         req.arrival_time)
+        for rep in fleet:
+            rep.sched.maybe_reoptimize(1.1, force=True)
+        router = EWSJFRouter(cost=cost, use_cache=use_cache)
+        picks = []
+        total = 0.0
+        for req in arrivals:
+            t0 = time.perf_counter()
+            rep = router.select(fleet, req, req.arrival_time)
+            total += time.perf_counter() - t0
+            picks.append(rep.replica_id)
+            rep.submit(copy.deepcopy(req), req.arrival_time)
+        return total / len(arrivals) * 1e6, picks
+
+    cached_us = fresh_us = float("inf")
+    picks_c = picks_f = None
+    for _ in range(repeats):
+        us, picks = run(use_cache=True)
+        cached_us = min(cached_us, us)
+        assert picks_c is None or picks == picks_c   # deterministic replay
+        picks_c = picks
+        us, picks = run(use_cache=False)
+        fresh_us = min(fresh_us, us)
+        picks_f = picks
+    return {"cached_us_per_arrival": cached_us,
+            "fresh_us_per_arrival": fresh_us,
+            "speedup": fresh_us / max(cached_us, 1e-9),
+            "decisions_equal": picks_c == picks_f,
+            "waiting_per_replica": waiting,
+            "probes": probes}
+
+
+def main(quick: bool = False, json_path: str | None = None) -> dict:
     cost = cost_model()
-    n = max(300, int(10_000 * SCALE))
+    n = 120 if quick else max(300, int(10_000 * SCALE))
     workload = WorkloadSpec(n_requests=n, arrival_rate=20.0).generate()
+    report: dict = {"n_requests": n, "quick": quick, "scenarios": {}}
 
     for scenario in ("uniform", "straggler", "disagg"):
         routers = {name: make_router(name, cost) for name in ROUTERS}
@@ -55,12 +121,16 @@ def main() -> None:
         wall_us = (time.perf_counter() - t0) * 1e6
 
         parts = []
+        srep: dict = {}
         for name in ROUTERS:
             res = out[name]
             st = res.ttft_stats()
             parts.append(f"{name}_short_ttft={st['short']['mean']:.4f}")
             parts.append(f"{name}_tok_s={res.tok_per_s:.1f}")
             parts.append(f"{name}_fin={len(res.finished)}")
+            srep[name] = {"short_ttft_mean": st["short"]["mean"],
+                          "tok_per_s": res.tok_per_s,
+                          "finished": len(res.finished)}
         rr, ew = out["round_robin"], out["ewsjf"]
         ttft_gain = (rr.ttft_stats()["short"]["mean"]
                      / max(ew.ttft_stats()["short"]["mean"], 1e-9))
@@ -69,11 +139,44 @@ def main() -> None:
         parts.append(f"ewsjf_vs_rr_short_ttft_x={ttft_gain:.2f}")
         parts.append(f"ewsjf_vs_rr_tok_ratio={thr_ratio:.3f}")
         parts.append(f"claim_ok={ok}")
+        srep["ewsjf_vs_rr_short_ttft_x"] = ttft_gain
+        srep["ewsjf_vs_rr_tok_ratio"] = thr_ratio
+        srep["claim_ok"] = ok
         if scenario == "disagg":
             parts.append(f"handoffs={ew.handoff_stats['handoffs']}")
             parts.append(f"kv_gb={ew.handoff_stats['total_gb']:.2f}")
+            srep["handoffs"] = ew.handoff_stats["handoffs"]
         emit(f"cluster_routing_{scenario}_n{n}", wall_us, "|".join(parts))
+        report["scenarios"][scenario] = srep
+
+    # Control-plane overhead: incremental snapshot cache vs rebuild/arrival.
+    # Queue depth stays production-ish even in --quick: the gap *is* the
+    # O(waiting) vs O(queues) difference, so shrinking depth understates it.
+    waiting = 300 if quick else 400
+    probes = 100 if quick else 200
+    t0 = time.perf_counter()
+    ov = measure_routing_overhead(cost, waiting=waiting, probes=probes)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    ok = ov["decisions_equal"] and ov["speedup"] >= 5.0
+    emit(f"cluster_routing_overhead_w{waiting}", wall_us,
+         f"cached_us={ov['cached_us_per_arrival']:.1f}|"
+         f"fresh_us={ov['fresh_us_per_arrival']:.1f}|"
+         f"speedup_x={ov['speedup']:.1f}|"
+         f"decisions_equal={ov['decisions_equal']}|claim_ok={ok}")
+    report["control_plane_overhead"] = ov
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return report
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized workload (crash canary + artifact)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results JSON (e.g. BENCH_cluster.json)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

@@ -14,7 +14,6 @@ import numpy as np
 from repro.core import (BayesianMetaOptimizer, EWSJFConfig, EWSJFScheduler,
                         MetaParams, RewardWeights, ServingSimulator,
                         WorkloadSpec, reward, reward_terms)
-from repro.core.partition import PartitionConfig, refine_and_prune
 
 from .common import SCALE, cost_model, engine_params
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import ServingSimulator, WorkloadSpec, run_comparison
+from repro.core import WorkloadSpec, run_comparison
 
 from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
 

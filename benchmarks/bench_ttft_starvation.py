@@ -11,7 +11,6 @@ from __future__ import annotations
 import copy
 import time
 
-import numpy as np
 
 from repro.core import ServingSimulator, WorkloadSpec
 

@@ -2,18 +2,34 @@
 
     PYTHONPATH=src:. python -m benchmarks.run            # CSV to stdout
     BENCH_SCALE=1.0 ... python -m benchmarks.run         # paper-scale sweeps
+    python -m benchmarks.run --quick                     # CI crash canary
+
+``--quick`` forces a tiny ``BENCH_SCALE`` (unless one is already set) and
+runs every section end-to-end in a few minutes — its job is to catch
+crashes on every PR, not to produce meaningful absolute numbers.  The
+machine-readable cluster artifact (``BENCH_cluster.json``) is produced by
+``python -m benchmarks.bench_cluster_routing --quick --json ...``.
 
 CSV convention: ``name,us_per_call,derived`` (derived = |-separated
 key=value results; paper-claim checks inline)."""
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny scale, every section; CI crash canary")
+    args = ap.parse_args(argv)
+    if args.quick:
+        os.environ.setdefault("BENCH_SCALE", "0.01")
+
     from . import (bench_cluster_routing, bench_kernels, bench_meta_optimizer,
                    bench_padding, bench_scheduler_overhead,
                    bench_table3_queue_count, bench_table10_summary,
@@ -28,7 +44,8 @@ def main() -> None:
         ("Meta-optimizer (App B / Fig 5)", bench_meta_optimizer.main),
         ("Scheduler overhead (SS5/Table 11)", bench_scheduler_overhead.main),
         ("TPU padding waste (beyond-paper)", bench_padding.main),
-        ("Cluster routing (beyond-paper)", bench_cluster_routing.main),
+        ("Cluster routing + control plane (beyond-paper)",
+         lambda: bench_cluster_routing.main(quick=args.quick)),
         ("Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()

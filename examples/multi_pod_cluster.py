@@ -1,6 +1,7 @@
-"""Cluster data plane demo: EWSJF-aware routing over a replica fleet with
-failures, stragglers, elastic scale-up — then a disaggregated
-prefill/decode pool with KV-handoff accounting.
+"""Cluster control-plane demo: EWSJF-aware routing over a replica fleet
+with failures and stragglers (scripted fault injection), a disaggregated
+prefill/decode pool with KV-handoff accounting, and a *reactive* SLO-burn
+autoscaler absorbing a traffic burst with re-admission of shed work.
 
     PYTHONPATH=src python examples/multi_pod_cluster.py
 """
@@ -9,8 +10,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.cluster import (AdmissionController, ClusterSimulator,
-                           ScenarioEvent, make_fleet, make_router)
+from repro.cluster import (AdmissionConfig, AdmissionController,
+                           AutoscalerConfig, ClusterSimulator, ScenarioEvent,
+                           SLOBurnAutoscaler, make_fleet, make_router)
 from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, WorkloadSpec
 
 
@@ -65,6 +67,31 @@ def main() -> None:
     res = sim.run(WorkloadSpec(n_requests=400, arrival_rate=20.0,
                                seed=1).generate())
     print_result(res)
+
+    print("\n== scenario 3: reactive autoscaler rides out a burst "
+          "(no scripted scale-up)")
+    burst = WorkloadSpec(n_requests=300, arrival_rate=30.0, seed=2).generate()
+    tail = WorkloadSpec(n_requests=80, arrival_rate=4.0, seed=3).generate()
+    t0 = burst[-1].arrival_time
+    for r in tail:
+        r.arrival_time += t0
+    fleet = make_fleet(1, cost, scheduler_factory=scheduler_factory)
+    autoscaler = SLOBurnAutoscaler(
+        scheduler_factory=scheduler_factory,
+        cfg=AutoscalerConfig(max_replicas=6, cooldown_up=0.5, up_patience=1))
+    sim = ClusterSimulator(
+        fleet, make_router("ewsjf", cost), cost,
+        admission=AdmissionController(config=AdmissionConfig(
+            shed_factor=1.5, retry_capacity=64)),
+        autoscaler=autoscaler)
+    res = sim.run(burst + tail)
+    print_result(res)
+    print(f"   autoscale: {res.autoscale['scale_ups']} ups, "
+          f"{res.autoscale['scale_downs']} downs | "
+          f"readmitted {res.readmitted} | "
+          f"final burn {{{', '.join(f'{k}={v:.2f}' for k, v in res.autoscale['burn'].items())}}}")
+    for t, action, rid in res.autoscale["events"]:
+        print(f"   t={t:6.2f}s scale-{action} (replica {rid})")
 
 
 if __name__ == "__main__":

@@ -12,8 +12,10 @@ from typing import Callable, Optional
 
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
-from .admission import (DEFAULT_SLO_CLASSES, AdmissionController,
-                        AdmissionDecision, SLOClass, classify_by_length)
+from .admission import (DEFAULT_SLO_CLASSES, AdmissionConfig,
+                        AdmissionController, AdmissionDecision, SLOClass,
+                        classify_by_length)
+from .autoscaler import AutoscalerConfig, ScaleEvent, SLOBurnAutoscaler
 from .disagg import HandoffChannel, KVHandoff
 from .health import HealthConfig, HealthMonitor
 from .replica import ReplicaModel, ReplicaParams
@@ -42,8 +44,9 @@ def make_fleet(n: int, cost: CostModel,
 
 
 __all__ = [
-    "AdmissionController", "AdmissionDecision", "SLOClass",
+    "AdmissionConfig", "AdmissionController", "AdmissionDecision", "SLOClass",
     "DEFAULT_SLO_CLASSES", "classify_by_length",
+    "AutoscalerConfig", "ScaleEvent", "SLOBurnAutoscaler",
     "HandoffChannel", "KVHandoff",
     "HealthConfig", "HealthMonitor",
     "ReplicaModel", "ReplicaParams",

@@ -1,4 +1,4 @@
-"""SLO-class admission control: load shedding + deadline drop.
+"""SLO-class admission control: shedding, re-admission, per-class budgets.
 
 Once prefill and decode contend (Liu et al., fairness-aware chunked-prefill
 scheduling), a saturated cluster must decide *which* work to refuse, not
@@ -8,14 +8,34 @@ cluster's best-case queue delay against the class TTFT budget and sheds
 sheddable classes that cannot meet it.  Admitted requests may still be
 deadline-dropped at dispatch time if they aged out while queued — dropping
 at the last moment before prefill recovers the whole prompt cost.
+
+Admission v2 (enabled by passing an :class:`AdmissionConfig`):
+
+* **Bounded re-admission queue** — a rejected sheddable request is
+  *deferred* instead of lost: it parks in a bounded retry queue and is
+  re-offered (with backoff) while its deadline still allows, so a transient
+  burst no longer permanently sheds work that the post-burst cluster could
+  easily serve.  Permanent shed happens only on queue overflow or expiry.
+* **Per-class token budgets** — under saturation each class is held to a
+  weighted fair share of a configured token rate (FairBatching-style
+  capacity shares rather than pure shed/keep): classes draw from per-class
+  token buckets refilled proportionally to ``SLOClass.weight``, so a batch
+  flood cannot starve standard traffic even before either misses its own
+  TTFT budget.  Non-sheddable classes bypass budget enforcement.
+
+Counting invariant (tested): a request increments ``admitted`` at most once
+(on its final successful admission — ``readmitted`` additionally counts the
+subset that were deferred first), and ``shed`` at most once (on permanent
+rejection).  ``deferred`` / ``budget_denied`` are *event* counters.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Callable, Optional
 
-from ..core.types import Request
+from ..core.types import Request, RequestState
 
 
 @dataclass(frozen=True)
@@ -25,13 +45,16 @@ class SLOClass:
     deadline: Optional[float]   # max queueing age before drop (None = never)
     priority: int = 0           # higher = more important (kept under load)
     sheddable: bool = True
+    weight: float = 1.0         # fair-share weight for per-class budgets
 
 
 DEFAULT_SLO_CLASSES = (
     SLOClass("interactive", ttft_target=1.0, deadline=10.0, priority=2,
-             sheddable=False),
-    SLOClass("standard", ttft_target=5.0, deadline=60.0, priority=1),
-    SLOClass("batch", ttft_target=60.0, deadline=None, priority=0),
+             sheddable=False, weight=4.0),
+    SLOClass("standard", ttft_target=5.0, deadline=60.0, priority=1,
+             weight=2.0),
+    SLOClass("batch", ttft_target=60.0, deadline=None, priority=0,
+             weight=1.0),
 )
 
 
@@ -48,6 +71,22 @@ def classify_by_length(req: Request, short_threshold: int = 256) -> str:
 
 
 @dataclass
+class AdmissionConfig:
+    """Admission-v2 knobs.  Constructing a controller *without* a config
+    reproduces the v1 one-shot shed behaviour (no retries, no budgets)."""
+
+    shed_factor: float = 1.0
+    # --- re-admission queue ---
+    retry_capacity: int = 256        # bounded; overflow sheds permanently
+    retry_backoff: float = 0.1       # seconds between attempts per request
+    retry_ttl: float = 30.0          # retry window for deadline-None classes
+    # --- per-class token budgets (0 disables) ---
+    token_budget_per_s: float = 0.0  # cluster token capacity shared by weight
+    budget_window: float = 1.0       # bucket burst horizon (seconds of rate)
+    saturation_delay: float = 1.0    # budgets enforced above this est. delay
+
+
+@dataclass
 class AdmissionDecision:
     admitted: bool
     slo: SLOClass
@@ -55,35 +94,159 @@ class AdmissionDecision:
     est_delay: float = 0.0
 
 
+@dataclass
+class _RetryEntry:
+    req: Request
+    slo: SLOClass
+    next_attempt: float
+    first_reject: float
+
+
 class AdmissionController:
     """Replica-facing admission: consulted by the cluster simulator on
-    arrival (shed) and by replicas at dispatch (deadline drop).  Also
-    usable standalone by ``serving.engine`` via the same ``admit`` hook."""
+    arrival (shed/defer) and by replicas at dispatch (deadline drop).  Also
+    usable standalone by ``serving.engine`` via the same ``admit`` hook.
+
+    Drive the re-admission queue by calling ``due_retries(now)`` and
+    re-offering each returned request to ``admit(...,
+    retry=True)`` — the cluster simulator and serving engine both do."""
 
     def __init__(self, classes=DEFAULT_SLO_CLASSES,
                  classify: Optional[Callable[[Request], str]] = None,
-                 shed_factor: float = 1.0):
+                 shed_factor: float = 1.0,
+                 config: Optional[AdmissionConfig] = None):
         self.classes = {c.name: c for c in classes}
         self._classify = classify or classify_by_length
-        self.shed_factor = shed_factor
-        self.shed: dict[str, int] = {c.name: 0 for c in classes}
-        self.admitted: dict[str, int] = {c.name: 0 for c in classes}
-        self.dropped: dict[str, int] = {c.name: 0 for c in classes}
+        # No config → v1 semantics (one-shot shed, no retries/budgets); an
+        # explicit AdmissionConfig wins over the legacy shed_factor arg.
+        self.cfg = config or AdmissionConfig(shed_factor=shed_factor,
+                                             retry_capacity=0)
+        self.shed_factor = self.cfg.shed_factor     # legacy attribute
+        names = [c.name for c in classes]
+        self.shed: dict[str, int] = {n: 0 for n in names}
+        self.admitted: dict[str, int] = {n: 0 for n in names}
+        self.dropped: dict[str, int] = {n: 0 for n in names}
+        self.deferred: dict[str, int] = {n: 0 for n in names}
+        self.readmitted: dict[str, int] = {n: 0 for n in names}
+        self.budget_denied: dict[str, int] = {n: 0 for n in names}
+        # re-admission queue (bounded) + ids currently/ever deferred
+        self._retry_q: deque[_RetryEntry] = deque()
+        self._deferred_ids: set[int] = set()
+        # per-class token buckets (weighted fair share of token_budget_per_s)
+        total_w = sum(c.weight for c in classes) or 1.0
+        self._rates = {c.name: self.cfg.token_budget_per_s * c.weight / total_w
+                       for c in classes}
+        self._buckets = {n: self._rates[n] * self.cfg.budget_window
+                         for n in names}
+        self._bucket_t = 0.0
 
     def slo_of(self, req: Request) -> SLOClass:
         return self.classes[self._classify(req)]
 
-    def admit(self, req: Request, now: float,
-              est_delay: float) -> AdmissionDecision:
-        """Arrival-time decision given the cluster's best-case queue delay
-        estimate (the router's min route cost)."""
+    # ---- per-class token budgets -----------------------------------------
+
+    @staticmethod
+    def _token_cost(req: Request) -> float:
+        return float(req.prompt_len + req.max_new_tokens)
+
+    def _refill(self, now: float) -> None:
+        dt = now - self._bucket_t
+        if dt <= 0:
+            return
+        self._bucket_t = now
+        for name, rate in self._rates.items():
+            cap = rate * self.cfg.budget_window
+            self._buckets[name] = min(cap, self._buckets[name] + rate * dt)
+
+    def budget_remaining(self, class_name: str) -> float:
+        return self._buckets.get(class_name, 0.0)
+
+    # ---- arrival / retry path --------------------------------------------
+
+    def admit(self, req: Request, now: float, est_delay: float,
+              retry: bool = False) -> AdmissionDecision:
+        """Arrival-time (or retry-time) decision given the cluster's
+        best-case queue delay estimate (the router's min route cost)."""
         slo = self.slo_of(req)
-        if slo.sheddable and est_delay > self.shed_factor * slo.ttft_target:
-            self.shed[slo.name] += 1
-            return AdmissionDecision(False, slo, reason="shed",
-                                     est_delay=est_delay)
+        budgets_on = self.cfg.token_budget_per_s > 0
+        if budgets_on:
+            self._refill(now)
+        # 1) Weighted fair share under saturation: a class that exhausted
+        #    its token bucket is refused even if its own TTFT still fits.
+        if (budgets_on and slo.sheddable
+                and est_delay > self.cfg.saturation_delay
+                and self._buckets[slo.name] < self._token_cost(req)):
+            self.budget_denied[slo.name] += 1
+            return self._reject(req, slo, now, est_delay, "budget")
+        # 2) SLO feasibility shed.
+        if slo.sheddable and est_delay > self.cfg.shed_factor * slo.ttft_target:
+            return self._reject(req, slo, now, est_delay, "shed")
+        # Admitted: charge the budget and count the request exactly once.
+        if budgets_on and slo.sheddable:
+            cost = self._token_cost(req)
+            self._buckets[slo.name] = max(0.0, self._buckets[slo.name] - cost)
         self.admitted[slo.name] += 1
+        if retry and req.request_id in self._deferred_ids:
+            self.readmitted[slo.name] += 1
+        self._deferred_ids.discard(req.request_id)
         return AdmissionDecision(True, slo, reason="ok", est_delay=est_delay)
+
+    def _retry_limit(self, slo: SLOClass) -> float:
+        return slo.deadline if slo.deadline is not None else self.cfg.retry_ttl
+
+    def _reject(self, req: Request, slo: SLOClass, now: float,
+                est_delay: float, why: str) -> AdmissionDecision:
+        """Defer into the bounded re-admission queue when the request can
+        still make its deadline; permanent shed otherwise."""
+        age_next = (now + self.cfg.retry_backoff) - req.arrival_time
+        if (self.cfg.retry_capacity > 0
+                and len(self._retry_q) < self.cfg.retry_capacity
+                and age_next < self._retry_limit(slo)):
+            self.deferred[slo.name] += 1
+            self._deferred_ids.add(req.request_id)
+            self._retry_q.append(_RetryEntry(
+                req=req, slo=slo, next_attempt=now + self.cfg.retry_backoff,
+                first_reject=now))
+            return AdmissionDecision(False, slo, reason="defer",
+                                     est_delay=est_delay)
+        self.shed[slo.name] += 1
+        self._deferred_ids.discard(req.request_id)
+        return AdmissionDecision(False, slo, reason=why, est_delay=est_delay)
+
+    # ---- re-admission queue ----------------------------------------------
+
+    def retry_pending(self) -> int:
+        return len(self._retry_q)
+
+    def next_retry_time(self) -> Optional[float]:
+        if not self._retry_q:
+            return None
+        return min(e.next_attempt for e in self._retry_q)
+
+    def due_retries(self, now: float
+                    ) -> tuple[list[Request], list[Request]]:
+        """Pop every parked request whose backoff elapsed.  Returns
+        ``(due, expired)``: the caller re-offers ``due`` through
+        ``admit(..., retry=True)``; ``expired`` aged past their deadline in
+        the queue and are permanently shed (already counted here)."""
+        due: list[Request] = []
+        expired: list[Request] = []
+        keep: deque[_RetryEntry] = deque()
+        for e in self._retry_q:
+            if e.next_attempt > now:
+                keep.append(e)
+            elif now - e.req.arrival_time >= self._retry_limit(e.slo):
+                self.shed[e.slo.name] += 1
+                self._deferred_ids.discard(e.req.request_id)
+                e.req.state = RequestState.FAILED
+                e.req.finish_time = now
+                expired.append(e.req)
+            else:
+                due.append(e.req)
+        self._retry_q = keep
+        return due, expired
+
+    # ---- dispatch-time deadline drop -------------------------------------
 
     def expired(self, req: Request, now: float) -> bool:
         """Dispatch-time deadline drop: the request aged out while queued."""
@@ -95,4 +258,8 @@ class AdmissionController:
 
     def stats(self) -> dict:
         return {"admitted": dict(self.admitted), "shed": dict(self.shed),
-                "dropped": dict(self.dropped)}
+                "dropped": dict(self.dropped),
+                "deferred": dict(self.deferred),
+                "readmitted": dict(self.readmitted),
+                "budget_denied": dict(self.budget_denied),
+                "retry_pending": len(self._retry_q)}

@@ -1,0 +1,174 @@
+"""Reactive autoscaling from SLO burn rate.
+
+The paper's thesis is that the scheduling layer should adapt from live
+performance feedback; this module extends that loop to *fleet size*.  Each
+SLO class tracks a **burn rate** — an EWMA of ``observed queue delay /
+class TTFT budget`` fed by the health monitor's delay samples (dispatch
+waits + current head-of-line waits).  Burn ≈ 1.0 means the class is
+spending its whole TTFT budget queueing; sustained burn above the
+scale-up threshold adds a replica, sustained burn below the scale-down
+threshold drains one.  Hysteresis comes from three mechanisms:
+
+  * a band between ``scale_up_burn`` and ``scale_down_burn`` where the
+    autoscaler holds;
+  * consecutive-breach *patience* counters (a single bursty sample never
+    scales);
+  * per-direction cooldowns so a fresh replica gets to absorb load before
+    the controller reacts again.
+
+The scaler only *decides*; the cluster simulator applies the decision
+(``add_replica`` / graceful drain), mirroring how the health monitor
+separates detection from recovery policy.  Scripted ``ScenarioEvent``
+scale-ups remain available for fault injection, but steady-state elasticity
+should come from here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..core.scheduler import BaseScheduler, FCFSScheduler
+from ..core.types import Request
+from .admission import DEFAULT_SLO_CLASSES, classify_by_length
+from .replica import ReplicaModel
+
+
+@dataclass
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 8
+    check_interval: float = 0.25     # control-loop period (sim seconds)
+    ewma_alpha: float = 0.35         # burn-rate smoothing
+    scale_up_burn: float = 1.0       # burn above this (sustained) → add
+    scale_down_burn: float = 0.30    # burn below this (sustained) → drain
+    up_patience: int = 2             # consecutive breaches before acting
+    down_patience: int = 8
+    cooldown_up: float = 1.0         # seconds after any scale-up
+    cooldown_down: float = 5.0       # seconds after any scale action
+    role: str = "unified"            # role/speed of replicas we add
+    speed: float = 1.0
+
+
+@dataclass
+class ScaleEvent:
+    time: float
+    action: str                      # "up" | "down"
+    replica_id: int
+    burn: dict[str, float] = field(default_factory=dict)
+
+
+class SLOBurnAutoscaler:
+    """Per-SLO-class queue-delay burn tracking + scale decisions."""
+
+    def __init__(self, scheduler_factory: Callable[[], BaseScheduler] = FCFSScheduler,
+                 classes=DEFAULT_SLO_CLASSES,
+                 classify: Optional[Callable[[Request], str]] = None,
+                 cfg: AutoscalerConfig | None = None):
+        self.scheduler_factory = scheduler_factory
+        self.classes = {c.name: c for c in classes}
+        self._classify = classify or classify_by_length
+        self.cfg = cfg or AutoscalerConfig()
+        self.burn: dict[str, float] = {c.name: 0.0 for c in classes}
+        self.events: list[ScaleEvent] = []
+        self._probe = Request(prompt_len=0)   # reusable classifier probe
+        self._up_streak = 0
+        self._down_streak = 0
+        self._last_check = float("-inf")
+        self._last_scale = float("-inf")
+        self._last_up = float("-inf")
+
+    # ---- burn tracking ----------------------------------------------------
+
+    def class_of(self, prompt_len: float, priority_class: int = 0) -> str:
+        self._probe.prompt_len = int(prompt_len)
+        self._probe.priority_class = priority_class
+        return self._classify(self._probe)
+
+    def observe(self, class_name: str, delay: float) -> None:
+        slo = self.classes[class_name]
+        ratio = delay / max(slo.ttft_target, 1e-9)
+        a = self.cfg.ewma_alpha
+        self.burn[class_name] = (1 - a) * self.burn[class_name] + a * ratio
+
+    def ingest(self, samples) -> None:
+        """Fold health-monitor ``delay_samples`` into per-class burn.  A
+        class with no sample this round observes 0 — an idle class should
+        decay toward scale-down, not freeze at its burst-time burn."""
+        seen: set[str] = set()
+        for prompt_len, priority_class, wait in samples:
+            name = self.class_of(prompt_len, priority_class)
+            self.observe(name, wait)
+            seen.add(name)
+        for name in self.burn:
+            if name not in seen:
+                self.observe(name, 0.0)
+
+    def peak_burn(self) -> float:
+        return max(self.burn.values()) if self.burn else 0.0
+
+    # ---- control loop -----------------------------------------------------
+
+    def due(self, now: float) -> bool:
+        return now - self._last_check >= self.cfg.check_interval
+
+    def decide(self, replicas: list[ReplicaModel], now: float) -> Optional[str]:
+        """Returns "up", "down", or None.  Call after ``ingest``; the caller
+        applies the action and then reports it via ``note_scaled``."""
+        self._last_check = now
+        n = sum(1 for r in replicas if r.schedulable())
+        peak = self.peak_burn()
+        if peak > self.cfg.scale_up_burn:
+            self._up_streak += 1
+            self._down_streak = 0
+        elif peak < self.cfg.scale_down_burn:
+            self._down_streak += 1
+            self._up_streak = 0
+        else:
+            self._up_streak = 0
+            self._down_streak = 0
+        if (self._up_streak >= self.cfg.up_patience
+                and n < self.cfg.max_replicas
+                and now - self._last_up >= self.cfg.cooldown_up):
+            return "up"
+        if (self._down_streak >= self.cfg.down_patience
+                and n > self.cfg.min_replicas
+                and now - self._last_scale >= self.cfg.cooldown_down):
+            return "down"
+        return None
+
+    def drain_candidate(self, replicas: list[ReplicaModel]
+                        ) -> Optional[ReplicaModel]:
+        """Least-loaded schedulable replica — but never the last prefill- or
+        decode-capable one (scaling down must not strand a role)."""
+        pool = [r for r in replicas if r.schedulable()]
+        if len(pool) <= self.cfg.min_replicas:
+            return None
+        prefill = [r for r in pool if r.accepts_prefill()]
+        decode = [r for r in pool if r.accepts_decode()]
+        cand = [r for r in pool
+                if not (r.accepts_prefill() and len(prefill) <= 1)
+                and not (r.accepts_decode() and len(decode) <= 1)]
+        if not cand:
+            return None
+        return min(cand, key=lambda r: (r.sched.waiting() + r.inflight()
+                                        + len(r.inbox), r.replica_id))
+
+    def note_scaled(self, action: str, replica: ReplicaModel,
+                    now: float) -> None:
+        self.events.append(ScaleEvent(time=now, action=action,
+                                      replica_id=replica.replica_id,
+                                      burn=dict(self.burn)))
+        self._last_scale = now
+        if action == "up":
+            self._last_up = now
+        self._up_streak = 0
+        self._down_streak = 0
+
+    def stats(self) -> dict:
+        return {"burn": dict(self.burn),
+                "events": [(e.time, e.action, e.replica_id)
+                           for e in self.events],
+                "scale_ups": sum(1 for e in self.events if e.action == "up"),
+                "scale_downs": sum(1 for e in self.events
+                                   if e.action == "down")}

@@ -10,7 +10,7 @@ not PCIe/NVLink, so the cost model uses the v5e ICI figure.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from ..core.cost_model import ICI_BW
 from ..core.types import Request

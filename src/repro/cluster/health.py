@@ -1,7 +1,12 @@
 """Heartbeat-based health monitoring shared by the cluster simulator and
 the legacy ``distributed.ClusterController``: dead-replica detection via
 heartbeat timeout, straggler detection via step-latency EWMA vs the
-cluster median."""
+cluster median.
+
+The monitor is also the control plane's telemetry tap: ``delay_samples``
+drains each replica's dispatch log (arrival→prefill wait of every request
+that started) and samples the current queue heads' waits, feeding the
+SLO-burn autoscaler (see cluster/autoscaler.py)."""
 
 from __future__ import annotations
 
@@ -59,3 +64,26 @@ class HealthMonitor:
         self.failures.extend(r.replica_id for r in dead)
         self.stragglers.extend(r.replica_id for r in drain)
         return dead, drain
+
+    def delay_samples(self, replicas: Iterable[ReplicaModel], now: float
+                      ) -> list[tuple[float, int, float]]:
+        """Queue-delay observations as ``(prompt_len, priority_class,
+        wait)`` triples: dispatched requests (drained from each replica's
+        bounded dispatch log) plus the *current* head-of-line waits — the
+        latter keep the burn signal rising while a saturated replica is
+        stuck between dispatches."""
+        samples: list[tuple[float, int, float]] = []
+        for rep in replicas:
+            if not rep.alive:
+                rep.dispatch_log.clear()
+                continue
+            while rep.dispatch_log:
+                req, wait = rep.dispatch_log.popleft()
+                samples.append((float(req.prompt_len), req.priority_class,
+                                wait))
+            if rep.accepts_prefill():
+                snap = rep.scheduler_snapshot(now)
+                for q in snap.queues:
+                    if q.depth and q.head_len is not None:
+                        samples.append((q.head_len, 0, q.head_wait))
+        return samples

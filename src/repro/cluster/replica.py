@@ -21,6 +21,7 @@ Roles (disaggregated prefill/decode, DistServe-style):
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -92,6 +93,10 @@ class ReplicaModel:
         self.preemptions = 0
         self.ticks = 0
         self.busy_time = 0.0
+        # Queue-delay observations (arrival→prefill-dispatch wait) consumed
+        # by the control plane (health monitor → SLO-burn autoscaler).
+        # Bounded: stale samples age out if nobody drains them.
+        self.dispatch_log: deque = deque(maxlen=512)
 
     # ---- routing-facing introspection -----------------------------------
 
@@ -114,8 +119,16 @@ class ReplicaModel:
     def inflight(self) -> int:
         return len(self.running)
 
-    def scheduler_snapshot(self, now: float) -> SchedulerSnapshot:
-        return self.sched.snapshot(now)
+    def scheduler_snapshot(self, now: float,
+                           fresh: bool = False) -> SchedulerSnapshot:
+        """Routing view of the local scheduler.  The default consumes the
+        scheduler's incrementally-maintained snapshot (event-driven
+        invalidation, O(queues) per access); ``fresh=True`` forces a full
+        rebuild — the legacy per-arrival path, kept for verification and
+        the control-plane overhead benchmark."""
+        if fresh:
+            return self.sched.snapshot(now)
+        return self.sched.snapshot_cached(now)
 
     def exec_residual(self, now: float) -> float:
         """Seconds until the current engine step finishes."""
@@ -124,7 +137,7 @@ class ReplicaModel:
     def backlog_cost(self, now: float) -> float:
         """Coarse work estimate (seconds at this replica's speed): queued
         prefill + residual decode of the in-flight batch."""
-        snap = self.sched.snapshot(now)
+        snap = self.sched.snapshot_cached(now)
         queued = sum(self.cost.c_prefill(q.mean_len) * q.depth
                      for q in snap.queues if q.depth)
         decode = sum(rr.remaining * self.cost.decode_step_time(1, rr.kv_tokens)
@@ -252,6 +265,8 @@ class ReplicaModel:
             plan.total_tokens = sum(int(r.prompt_len) for r in live)
         if not plan.requests:
             return 0.0
+        for r in plan.requests:
+            self.dispatch_log.append((r, max(0.0, now - r.arrival_time)))
         batch_tokens = plan.total_tokens
         padded = max(plan.padded_tokens if self.p.bucket_pad else batch_tokens,
                      batch_tokens)

@@ -77,36 +77,76 @@ class LeastLoadedRouter(Router):
 
 
 class EWSJFRouter(Router):
+    """EWSJF-aware router with an incremental state cache.
+
+    The expensive inputs to ``route_cost`` — per-queue aggregate work terms
+    derived from each replica's ``SchedulerSnapshot`` — are cached and
+    invalidated *event-driven*: replicas' schedulers publish a monotonic
+    ``version`` bumped on enqueue/dispatch/finish (delta publication, see
+    ``BaseScheduler._publish``), so ``select`` is a cached-cost lookup
+    instead of an O(replicas·waiting) snapshot rebuild per arrival.  Only
+    the O(1)-per-queue time-dependent terms (head scores, executor
+    residual, KV occupancy) are read fresh, so routing decisions are
+    *identical* to the uncached path (``use_cache=False``, kept for
+    verification and the control-plane overhead benchmark)."""
+
     name = "ewsjf"
 
     def __init__(self, cost: CostModel | None = None,
                  kv_pressure_knee: float = 0.8,
                  kv_pressure_slope: float = 5.0,
-                 contention_horizon: int = 8):
+                 contention_horizon: int = 8,
+                 use_cache: bool = True):
         self.cost = cost or CostModel()
         self.kv_pressure_knee = kv_pressure_knee
         self.kv_pressure_slope = kv_pressure_slope
         # how many waiting requests per competing queue are assumed to run
         # before our queue's head gets picked (bounded lookahead)
         self.contention_horizon = contention_horizon
+        self.use_cache = use_cache
+        # replica_id -> (scheduler version, {queue_id: (work, capped_work)})
+        self._work_memo: dict[int, tuple[int, dict[int, tuple[float, float]]]] = {}
 
     def select(self, replicas, req, now):
         pool = [r for r in replicas if r.accepts_prefill()]
         if not pool:
             return None
+        if len(self._work_memo) > len(replicas):
+            # evict memo entries for replicas that failed/drained away
+            live = {r.replica_id for r in replicas}
+            self._work_memo = {k: v for k, v in self._work_memo.items()
+                               if k in live}
         return min(pool, key=lambda r: (self.route_cost(r, req, now),
                                         r.replica_id))
+
+    def _queue_works(self, replica: ReplicaModel,
+                     snap) -> dict[int, tuple[float, float]]:
+        """Per-queue (total FIFO work, lookahead-capped work) in prefill
+        seconds.  Time-independent between scheduler mutations, so cacheable
+        keyed by the scheduler's published version."""
+        if self.use_cache:
+            hit = self._work_memo.get(replica.replica_id)
+            if hit is not None and hit[0] == replica.sched.version:
+                return hit[1]
+        works = {}
+        for q in snap.queues:
+            unit = self.cost.c_prefill(max(q.mean_len, 1.0))
+            works[q.queue_id] = (q.depth * unit,
+                                 min(q.depth, self.contention_horizon) * unit)
+        if self.use_cache:
+            self._work_memo[replica.replica_id] = (replica.sched.version,
+                                                   works)
+        return works
 
     def route_cost(self, replica: ReplicaModel, req, now: float) -> float:
         """Estimated start delay for ``req`` if routed to ``replica``."""
         L = float(req.prompt_len)
-        snap = replica.scheduler_snapshot(now)
+        snap = replica.scheduler_snapshot(now, fresh=not self.use_cache)
+        works = self._queue_works(replica, snap)
         mine = snap.queue_for(L)
 
         # 1) FIFO work ahead of us inside our own interval queue.
-        ahead = 0.0
-        if mine is not None and mine.depth:
-            ahead = mine.depth * self.cost.c_prefill(max(mine.mean_len, 1.0))
+        ahead = works[mine.queue_id][0] if mine is not None else 0.0
 
         # 2) Cross-queue contention, weighted by the density scores the
         #    per-replica EWSJF scheduler will actually arbitrate with: a
@@ -119,8 +159,7 @@ class EWSJFRouter(Router):
             if q.depth == 0:
                 continue
             share = q.head_score / (q.head_score + my_head_score + 1e-9)
-            n = min(q.depth, self.contention_horizon)
-            contention += share * n * self.cost.c_prefill(max(q.mean_len, 1.0))
+            contention += share * works[q.queue_id][1]
 
         # 3) Executor state: residual of the running step + decode drag.
         resid = replica.exec_residual(now)
@@ -139,12 +178,12 @@ class EWSJFRouter(Router):
         return delay
 
 
-def make_router(name: str, cost: CostModel | None = None) -> Router:
+def make_router(name: str, cost: CostModel | None = None, **kw) -> Router:
     if name in ("rr", "round_robin"):
         return RoundRobinRouter()
     if name in ("ll", "least_loaded"):
         return LeastLoadedRouter()
     if name == "ewsjf":
-        return EWSJFRouter(cost=cost)
+        return EWSJFRouter(cost=cost, **kw)
     raise ValueError(f"unknown router '{name}'; "
                      f"have round_robin, least_loaded, ewsjf")

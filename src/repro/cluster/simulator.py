@@ -20,7 +20,7 @@ Event loop per iteration:
 from __future__ import annotations
 
 import copy
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -29,6 +29,7 @@ from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
 from ..core.types import Request, RequestState
 from .admission import AdmissionController
+from .autoscaler import SLOBurnAutoscaler
 from .disagg import HandoffChannel
 from .health import HealthConfig, HealthMonitor
 from .replica import ReplicaModel, ReplicaParams
@@ -38,7 +39,9 @@ from .router import EWSJFRouter, Router
 @dataclass
 class ScenarioEvent:
     """Scripted control-plane event: ``action`` in {fail, drain, add_replica,
-    set_speed}."""
+    set_speed}.  Intended for *fault injection* (failures, stragglers,
+    speed changes); steady-state elasticity should come from the reactive
+    ``SLOBurnAutoscaler`` rather than scripted ``add_replica`` events."""
 
     time: float
     action: str
@@ -58,6 +61,9 @@ class ClusterSimResult:
     handoff_stats: dict
     replica_stats: list[dict]
     health: dict
+    admission: dict = field(default_factory=dict)
+    autoscale: dict = field(default_factory=dict)
+    readmitted: int = 0
 
     @property
     def req_per_s(self) -> float:
@@ -85,20 +91,35 @@ class ClusterSimResult:
                             and r.prompt_len > short_threshold])
         return {"all": s(ttfts), "short": s(short), "long": s(longs)}
 
+    def ttft_by_class(self, classify=None) -> dict:
+        """Per-SLO-class TTFT stats (mean/p95/n) over finished requests."""
+        from .admission import classify_by_length
+        classify = classify or classify_by_length
+        groups: dict[str, list[float]] = {}
+        for r in self.finished:
+            if r.ttft is not None:
+                groups.setdefault(classify(r), []).append(r.ttft)
+        return {name: {"mean": float(np.mean(v)),
+                       "p95": float(np.percentile(v, 95)), "n": len(v)}
+                for name, v in groups.items()}
+
 
 class ClusterSimulator:
     def __init__(self, replicas: Sequence[ReplicaModel], router: Router,
                  cost: CostModel,
                  admission: Optional[AdmissionController] = None,
                  channel: Optional[HandoffChannel] = None,
-                 health: HealthConfig | None = None):
+                 health: HealthConfig | None = None,
+                 autoscaler: Optional[SLOBurnAutoscaler] = None):
         self.replicas: list[ReplicaModel] = list(replicas)
         self.router = router
         self.cost = cost
         self.admission = admission
+        self.autoscaler = autoscaler
         self.channel = channel or HandoffChannel()
         self.monitor = HealthMonitor(health)
         self.reenqueued = 0
+        self.readmitted = 0
         self.shed: list[Request] = []
         self.backlog: list[Request] = []     # admitted but unroutable (yet)
         self.now = 0.0
@@ -136,17 +157,36 @@ class ClusterSimulator:
                    for r in pool)
 
     def ingest(self, req: Request) -> bool:
-        """Admission + routing for one arrival.  Returns False if shed."""
+        """Admission + routing for one arrival.  Returns False if not (yet)
+        admitted — deferred requests park in the controller's re-admission
+        queue and are re-offered by ``_pump_retries``."""
         if self.admission is not None:
             dec = self.admission.admit(req, self.now,
                                        self._est_best_delay(req))
             if not dec.admitted:
-                req.state = RequestState.FAILED
-                req.finish_time = self.now
-                self.shed.append(req)
+                if dec.reason != "defer":
+                    req.state = RequestState.FAILED
+                    req.finish_time = self.now
+                    self.shed.append(req)
                 return False
         self._route(req)
         return True
+
+    def _pump_retries(self, now: float) -> None:
+        """Re-offer parked requests whose backoff elapsed; expired ones are
+        permanently shed."""
+        due, expired = self.admission.due_retries(now)
+        self.shed.extend(expired)
+        for req in due:
+            dec = self.admission.admit(req, now, self._est_best_delay(req),
+                                       retry=True)
+            if dec.admitted:
+                self.readmitted += 1
+                self._route(req)
+            elif dec.reason != "defer":
+                req.state = RequestState.FAILED
+                req.finish_time = now
+                self.shed.append(req)
 
     def _route(self, req: Request) -> None:
         rep = self.router.select(self.replicas, req, self.now)
@@ -165,6 +205,22 @@ class ClusterSimulator:
     def _handle_drain(self, rep: ReplicaModel) -> None:
         for req in rep.start_drain():
             self._route(req)
+
+    def _autoscale_tick(self, now: float) -> None:
+        """One reactive-control round: fold the health monitor's queue-delay
+        samples into per-class burn, then apply at most one scale action."""
+        self.autoscaler.ingest(self.monitor.delay_samples(self.replicas, now))
+        act = self.autoscaler.decide(self.replicas, now)
+        if act == "up":
+            rep = self.add_replica(self.autoscaler.scheduler_factory(),
+                                   role=self.autoscaler.cfg.role,
+                                   speed=self.autoscaler.cfg.speed)
+            self.autoscaler.note_scaled("up", rep, now)
+        elif act == "down":
+            victim = self.autoscaler.drain_candidate(self.replicas)
+            if victim is not None:
+                self._handle_drain(victim)
+                self.autoscaler.note_scaled("down", victim, now)
 
     def _apply_event(self, ev: ScenarioEvent) -> None:
         if ev.action == "fail":
@@ -221,6 +277,10 @@ class ClusterSimulator:
             while ai < n_total and arrivals[ai].arrival_time <= t:
                 self.ingest(arrivals[ai])
                 ai += 1
+            if self.admission is not None and self.admission.retry_pending():
+                self._pump_retries(t)
+            if self.autoscaler is not None and self.autoscaler.due(t):
+                self._autoscale_tick(t)
             if self.backlog:
                 still = []
                 for req in self.backlog:
@@ -262,6 +322,12 @@ class ClusterSimulator:
                                for h in rep.inbox if h.ready_time > t))
             if self.monitor.due(t) or self.backlog:
                 nxt.append(t + self.monitor.cfg.check_interval)
+            if self.admission is not None:
+                nr = self.admission.next_retry_time()
+                if nr is not None:
+                    nxt.append(max(nr, t + 1e-9))
+            if self.autoscaler is not None and self._in_system():
+                nxt.append(t + self.autoscaler.cfg.check_interval)
             if nxt:
                 t = max(t + 1e-9, min(nxt))
             elif not stepped:
@@ -278,7 +344,12 @@ class ClusterSimulator:
             handoff_stats=self.channel.stats(),
             replica_stats=[self._replica_stat(rep) for rep in self.replicas],
             health={"failures": list(self.monitor.failures),
-                    "stragglers": list(self.monitor.stragglers)})
+                    "stragglers": list(self.monitor.stragglers)},
+            admission=(self.admission.stats() if self.admission is not None
+                       else {}),
+            autoscale=(self.autoscaler.stats() if self.autoscaler is not None
+                       else {}),
+            readmitted=self.readmitted)
 
     def _in_system(self) -> int:
         return sum(rep.sched.waiting() + rep.inflight() + len(rep.inbox)

@@ -44,7 +44,11 @@ def _ensure_loaded():
     global _loaded
     if _loaded:
         return
-    from . import (deepseek_v2_lite_16b, gemma3_4b, h2o_danube_1p8b,  # noqa
+    from . import (deepseek_v2_lite_16b, gemma3_4b, h2o_danube_1p8b,
                    hubert_xlarge, internvl2_76b, llama2_13b, mamba2_370m,
                    minicpm3_4b, phi35_moe_42b, qwen3_4b, recurrentgemma_9b)
+    # imported for their registration side effect only
+    _ = (deepseek_v2_lite_16b, gemma3_4b, h2o_danube_1p8b, hubert_xlarge,
+         internvl2_76b, llama2_13b, mamba2_370m, minicpm3_4b, phi35_moe_42b,
+         qwen3_4b, recurrentgemma_9b)
     _loaded = True

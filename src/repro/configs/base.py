@@ -6,8 +6,7 @@ this dataclass; the model assembly (models/model.py) reads only this config.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

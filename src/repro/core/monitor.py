@@ -17,7 +17,7 @@ meta-optimizer consumes (Eq. 5):
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -23,7 +23,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .scoring import QueueProfile, ScoringWeights, weights_for_queue
+from .scoring import QueueProfile, weights_for_queue
 from .types import MetaParams, QueueBounds, Request
 
 
@@ -38,6 +38,7 @@ class SchedulerQueue:
     empty_cnt: int = 0
     routed_count: int = 0
     routed_len_sum: float = 0.0
+    tok_sum: int = 0                  # waiting prompt tokens (incremental)
     obs_min: float = float("inf")     # observed data edges (Alg. 2's
     obs_max: float = float("-inf")    # Q_i.max_len / Q_{i+1}.min_len)
 
@@ -51,12 +52,21 @@ class SchedulerQueue:
         self.requests.append(req)
         self.routed_count += 1
         self.routed_len_sum += req.prompt_len
+        self.tok_sum += int(req.prompt_len)
         self.obs_min = min(self.obs_min, float(req.prompt_len))
         self.obs_max = max(self.obs_max, float(req.prompt_len))
         self.empty_cnt = 0
 
     def pop(self) -> Request:
-        return self.requests.popleft()
+        req = self.requests.popleft()
+        self.tok_sum -= int(req.prompt_len)
+        return req
+
+    def clear_requests(self) -> list[Request]:
+        out = list(self.requests)
+        self.requests.clear()
+        self.tok_sum = 0
+        return out
 
     @property
     def mean_len(self) -> float:
@@ -203,16 +213,22 @@ class QueueManager:
         q.requests = stay
         # recompute q's observed edges (its requests may have moved)
         q.obs_min, q.obs_max = float("inf"), float("-inf")
-        q.routed_count, q.routed_len_sum = 0, 0.0
+        q.routed_count, q.routed_len_sum, q.tok_sum = 0, 0.0, 0
         for r in stay:
             q.obs_min = min(q.obs_min, float(r.prompt_len))
             q.obs_max = max(q.obs_max, float(r.prompt_len))
             q.routed_count += 1
             q.routed_len_sum += r.prompt_len
+            q.tok_sum += int(r.prompt_len)
+        # re-label moved requests: queue_id drives delta publication
+        # (scheduler._snapshot_delta) and must name the queue that now
+        # actually holds the request
         for r in move_b:
             bubble.push(r)
+            r.queue_id = bubble.queue_id
         for r in move_t:
             tail.push(r)
+            r.queue_id = tail.queue_id
         self.queues[qi + 1: qi + 1] = [bubble, tail]
         self.bubbles_created += 1
         return bubble

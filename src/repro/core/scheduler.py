@@ -11,8 +11,8 @@ meta-optimizer one trial when the trial interval elapses.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
+from math import log
 from typing import Callable, Optional
 
 import numpy as np
@@ -20,10 +20,10 @@ import numpy as np
 from .batch_builder import BatchBudget, BatchBuilder
 from .cost_model import CostModel, make_cost_fn
 from .meta_optimizer import BayesianMetaOptimizer
-from .monitor import Monitor, RewardWeights, WindowStats, reward, reward_terms
-from .partition import PartitionConfig, kmeans_partition, refine_and_prune
-from .queues import QueueManager
-from .scoring import compute_score
+from .monitor import Monitor, RewardWeights, reward, reward_terms
+from .partition import PartitionConfig, refine_and_prune
+from .queues import QueueManager, SchedulerQueue
+from .scoring import QueueProfile, compute_score, weights_for_queue
 from .types import (BatchPlan, MetaParams, QueueBounds, QueueSnapshot,
                     Request, SchedulerPolicy, SchedulerSnapshot)
 
@@ -32,6 +32,15 @@ class BaseScheduler:
     """Interface every admission policy implements."""
 
     name = "base"
+    # Monotonic mutation counter: bumped (via ``_publish``) whenever the
+    # queue state visible through ``snapshot()`` changes.  Cluster-level
+    # caches (router cost memos, replica snapshot caches) key on it for
+    # event-driven invalidation instead of rebuilding per arrival.
+    version = 0
+
+    def _publish(self) -> None:
+        """Delta-publication hook: mark the scheduler state as changed."""
+        self.version = self.version + 1
 
     def submit(self, req: Request, now: float) -> None:
         raise NotImplementedError
@@ -53,6 +62,12 @@ class BaseScheduler:
         pseudo-queue spanning [0, inf), EWSJFScheduler its live partition."""
         return SchedulerSnapshot(policy=self.name, waiting=self.waiting(),
                                  waiting_tokens=0, queues=[])
+
+    def snapshot_cached(self, now: float) -> SchedulerSnapshot:
+        """Like ``snapshot`` but allowed to reuse incrementally-maintained
+        state between mutations (same values, cheaper).  Policies without an
+        incremental view fall back to a fresh build."""
+        return self.snapshot(now)
 
     def drain(self) -> list[Request]:
         """Remove and return every waiting request.  Required by the
@@ -78,10 +93,13 @@ class FCFSScheduler(BaseScheduler):
 
     def __init__(self):
         self.queue: list[Request] = []
+        self._tok_sum = 0
 
     def submit(self, req: Request, now: float) -> None:
         req.enqueue_time = now
         self.queue.append(req)
+        self._tok_sum += int(req.prompt_len)
+        self._publish()
 
     def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
         plan = BatchPlan(requests=[])
@@ -98,7 +116,9 @@ class FCFSScheduler(BaseScheduler):
                 used += need
             plan.requests.append(self.queue.pop(0))
             plan.total_tokens += int(head.prompt_len)
+            self._tok_sum -= int(head.prompt_len)
         if plan.requests:
+            self._publish()
             from .batch_builder import DEFAULT_BUCKETS, _bucket_edge
             edge = _bucket_edge(max(r.prompt_len for r in plan.requests),
                                 DEFAULT_BUCKETS)
@@ -109,7 +129,7 @@ class FCFSScheduler(BaseScheduler):
         return len(self.queue)
 
     def snapshot(self, now: float) -> SchedulerSnapshot:
-        tokens = sum(int(r.prompt_len) for r in self.queue)
+        tokens = self._tok_sum
         head = self.queue[0] if self.queue else None
         mean = tokens / len(self.queue) if self.queue else 0.0
         q = QueueSnapshot(
@@ -124,6 +144,8 @@ class FCFSScheduler(BaseScheduler):
 
     def drain(self) -> list[Request]:
         out, self.queue = self.queue, []
+        self._tok_sum = 0
+        self._publish()
         return out
 
 
@@ -204,6 +226,21 @@ class EWSJFScheduler(BaseScheduler):
         self._trial_token_mark = 0
         self.tick_count = 0
         self.reopt_count = 0
+        # Incrementally-maintained snapshot (cluster routing cache): rebuilt
+        # only on structural changes, patched in place on submit/dispatch,
+        # head scores refreshed lazily per access time.
+        self._snap: Optional[SchedulerSnapshot] = None
+        self._snap_entries: list[tuple[QueueSnapshot, SchedulerQueue]] = []
+        self._snap_by_id: dict[int, int] = {}        # queue_id -> entry index
+        self._snap_ids: tuple[int, ...] = ()
+        self._snap_profiles: dict[int, QueueProfile] = {}
+        # Per-queue head-score coefficients: the head request only changes on
+        # a published delta, and between deltas its score is *affine in
+        # time* — Φ = qf·(w_base + w_fair·log(b+1)) + qf·w_urg/C(b) · wait —
+        # so refresh is O(1) per queue with no cost-model calls.
+        # Entry: (head_arrival, head_len, base, slope) or None when empty.
+        self._snap_coeffs: list[Optional[tuple[float, float, float, float]]] = []
+        self._snap_time: Optional[float] = None
 
     # ---- request path ----------------------------------------------------
 
@@ -216,6 +253,8 @@ class EWSJFScheduler(BaseScheduler):
             q = self.manager.queues[self.manager._find_interval(req.prompt_len)]
             q.push(req)
             req.queue_id = q.queue_id
+        self._snapshot_delta([req.queue_id] if req.queue_id is not None
+                             else [])
 
     def on_finish(self, req: Request, now: float) -> None:
         self.monitor.observe_finish(req)
@@ -247,9 +286,109 @@ class EWSJFScheduler(BaseScheduler):
     def drain(self) -> list[Request]:
         out: list[Request] = []
         for q in self.manager.queues:
-            out.extend(q.requests)
-            q.requests.clear()
+            out.extend(q.clear_requests())
+        self._mark_snapshot_dirty()
         return out
+
+    # ---- incremental snapshot (cluster routing cache) ----------------------
+
+    def _mark_snapshot_dirty(self) -> None:
+        """Structural change (repartition / bubble / prune / drain): the
+        cached snapshot must be rebuilt from scratch on next access."""
+        self._snap = None
+        self._publish()
+
+    def _head_coeff(self, q: SchedulerQueue
+                    ) -> Optional[tuple[float, float, float, float]]:
+        head = q.peek()
+        if head is None:
+            return None
+        p = self._snap_profiles[q.queue_id]
+        w = p.weights
+        b = float(head.prompt_len)
+        cost = max(self.c_prefill(b), 1e-9)
+        qf = (p.index + 1.0) / (p.mean_len + 1.0)
+        base = qf * (w.w_base + w.w_fairness * log(b + 1.0))
+        slope = qf * w.w_urgency / cost
+        return (head.arrival_time, b, base, slope)
+
+    def _snapshot_delta(self, queue_ids) -> None:
+        """Patch the cached snapshot after a local change (enqueue or
+        dispatch touching ``queue_ids``).  Falls back to a full rebuild flag
+        when the queue *structure* changed underneath (new bubble, prune,
+        repartition)."""
+        self._publish()
+        if self._snap is None:
+            return
+        if tuple(q.queue_id for q in self.manager.queues) != self._snap_ids:
+            self._snap = None
+            return
+        for qid in set(queue_ids):
+            idx = self._snap_by_id.get(qid)
+            if idx is None:
+                self._snap = None
+                return
+            qs, q = self._snap_entries[idx]
+            qs.depth = len(q)
+            qs.tokens = q.tok_sum
+            qs.mean_len = q.mean_len
+            self._snap_profiles[qid] = QueueProfile(
+                index=qs.index, mean_len=q.mean_len,
+                weights=weights_for_queue(self.manager.meta, q.mean_len))
+            self._snap_coeffs[idx] = self._head_coeff(q)
+        self._snap.waiting = sum(qs.depth for qs, _ in self._snap_entries)
+        self._snap.waiting_tokens = sum(qs.tokens
+                                        for qs, _ in self._snap_entries)
+        self._snap_time = None           # heads may have changed → refresh
+
+    def _rebuild_snapshot(self, now: float) -> None:
+        profiles = self.manager.profiles()
+        self._snap_profiles = profiles
+        entries: list[tuple[QueueSnapshot, SchedulerQueue]] = []
+        queues: list[QueueSnapshot] = []
+        total_reqs = 0
+        total_tokens = 0
+        for i, q in enumerate(self.manager.queues):
+            qs = QueueSnapshot(
+                queue_id=q.queue_id, index=i,
+                lo=q.bounds.lo, hi=q.bounds.hi,
+                depth=len(q), tokens=q.tok_sum, mean_len=q.mean_len)
+            entries.append((qs, q))
+            queues.append(qs)
+            total_reqs += len(q)
+            total_tokens += q.tok_sum
+        self._snap = SchedulerSnapshot(policy=self.name, waiting=total_reqs,
+                                       waiting_tokens=total_tokens,
+                                       queues=queues)
+        self._snap_entries = entries
+        self._snap_by_id = {q.queue_id: i for i, (_, q) in enumerate(entries)}
+        self._snap_ids = tuple(q.queue_id for q in self.manager.queues)
+        self._snap_coeffs = [self._head_coeff(q) for _, q in entries]
+        self._snap_time = None
+
+    def _refresh_heads(self, now: float) -> None:
+        for (qs, _), coef in zip(self._snap_entries, self._snap_coeffs):
+            if coef is None:
+                qs.head_len, qs.head_wait, qs.head_score = None, 0.0, 0.0
+            else:
+                arr, blen, base, slope = coef
+                wait = now - arr
+                if wait < 0.0:
+                    wait = 0.0
+                qs.head_len = blen
+                qs.head_wait = wait
+                qs.head_score = base + slope * wait
+        self._snap_time = now
+
+    def snapshot_cached(self, now: float) -> SchedulerSnapshot:
+        """Event-driven snapshot: identical values to ``snapshot(now)`` but
+        O(queues) per access (head-score refresh) instead of O(waiting)
+        (full aggregate rebuild) — rebuilt only after structural changes."""
+        if self._snap is None:
+            self._rebuild_snapshot(now)
+        if self._snap_time != now:
+            self._refresh_heads(now)
+        return self._snap
 
     # ---- tactical loop (Algorithm 1) --------------------------------------
 
@@ -262,14 +401,22 @@ class EWSJFScheduler(BaseScheduler):
                 req = q.peek()
                 updated_scores[q.queue_id] = compute_score(
                     req, profiles[q.queue_id], now, self.c_prefill)
-        self.manager.prune_empty()
+        pruned = self.manager.prune_empty()
         if not updated_scores:
+            if pruned:
+                self._mark_snapshot_dirty()
             return BatchPlan(requests=[])
         primary_id = max(updated_scores, key=updated_scores.get)
         primary = next(q for q in self.manager.queues
                        if q.queue_id == primary_id)
         builder = BatchBuilder(budget)
-        return builder.build(self.manager, primary, now)
+        plan = builder.build(self.manager, primary, now)
+        if pruned:
+            self._mark_snapshot_dirty()
+        elif plan.requests:
+            self._snapshot_delta([r.queue_id for r in plan.requests
+                                  if r.queue_id is not None])
+        return plan
 
     # ---- strategic loop ----------------------------------------------------
 
@@ -306,6 +453,7 @@ class EWSJFScheduler(BaseScheduler):
                                    max_queues=meta.max_queues)
             bounds = refine_and_prune(lengths, pcfg)
         self.manager.apply_policy(bounds, meta)
+        self._mark_snapshot_dirty()
 
     def online_adjust(self, now: float) -> None:
         """Online (real-time) mode (§3.1): lightweight boundary nudges from
@@ -328,6 +476,7 @@ class EWSJFScheduler(BaseScheduler):
                          else new_hi)
             q.bounds = QueueBounds(q.bounds.lo, new_hi)
             nxt.bounds = QueueBounds(new_hi, nxt.bounds.hi)
+        self._mark_snapshot_dirty()
 
     def _advance_trial(self, now: float) -> None:
         if self._trial_meta is None:
@@ -374,6 +523,7 @@ class EWSJFScheduler(BaseScheduler):
         meta = MetaParams(**state["meta"])
         bounds = [QueueBounds(lo, hi) for lo, hi, _ in state["bounds"]]
         self.manager.apply_policy(bounds, meta)
+        self._mark_snapshot_dirty()
         for i, (_, _, is_bubble) in enumerate(state["bounds"]):
             self.manager.queues[i].is_bubble = is_bubble
         self.monitor.history.extend(state["history"])

@@ -22,7 +22,6 @@ the real JAX engine (serving/engine.py); only the executor differs.
 
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 
 import numpy as np

@@ -24,7 +24,7 @@ dry-run so the roofline table shows the cost.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

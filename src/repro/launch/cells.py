@@ -16,7 +16,6 @@ Shapes (assignment):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -11,7 +11,6 @@ import re                # noqa: E402
 import subprocess        # noqa: E402
 import sys               # noqa: E402
 import time              # noqa: E402
-import traceback         # noqa: E402
 from pathlib import Path # noqa: E402
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "launch_out" / "dryrun"

@@ -26,7 +26,6 @@ number this module returns is per-chip.
 
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from ..configs import get_smoke_config
-from ..core import (CostModel, EWSJFConfig, EWSJFScheduler, FCFSScheduler,
+from ..core import (EWSJFConfig, EWSJFScheduler, FCFSScheduler,
                     Request, SJFScheduler)
 from ..models import init_params
 from ..serving import EngineConfig, ServingEngine

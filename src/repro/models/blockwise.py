@@ -19,7 +19,6 @@ blockwise threshold; decode keeps the single-token einsum path.
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
 import jax.numpy as jnp

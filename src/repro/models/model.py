@@ -14,8 +14,6 @@ gemma3's 262k vocab × 4k seq × 16 rows/device would be ~34 GB).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,6 @@ TPU MoE; capacity_factor controls the head-room.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +30,8 @@ from ..configs.base import ModelConfig
 from .common import dense_init
 
 try:                                    # jax>=0.6 moved shard_map
-    from jax import shard_map as _shard_map_mod  # type: ignore
     shard_map = jax.shard_map
-except (ImportError, AttributeError):   # older jax: experimental home
+except AttributeError:                  # older jax: experimental home
     from jax.experimental.shard_map import shard_map
 
 

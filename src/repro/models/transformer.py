@@ -15,9 +15,8 @@ Caches mirror this layout: {"head": [..], "stack": {slot_i: stacked}, "tail": [.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -25,8 +25,7 @@ contaminated, so those families run with exact-length prefill
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -95,6 +94,7 @@ class ServingEngine:
         # object with .admit(req, now, est_delay) -> decision.admitted).
         self.admission = admission
         self.shed: list[Request] = []
+        self.readmitted = 0
         self._prefill_tok_rate = 0.0     # EWMA tokens/s, for delay estimates
         self.finished: list[Request] = []
         self.preemptions = 0
@@ -160,11 +160,31 @@ class ServingEngine:
         if self.admission is not None:
             dec = self.admission.admit(req, now, self._est_queue_delay(now))
             if not dec.admitted:
+                # "defer" parks the request in the controller's bounded
+                # re-admission queue (admission v2); it is re-offered by
+                # _pump_retries until its deadline passes.
+                if dec.reason != "defer":
+                    req.state = RequestState.FAILED
+                    req.finish_time = now
+                    self.shed.append(req)
+                return
+        self.sched.submit(req, now=now)
+
+    def _pump_retries(self, now: float) -> None:
+        if self.admission is None or not self.admission.retry_pending():
+            return
+        due, expired = self.admission.due_retries(now)
+        self.shed.extend(expired)
+        for req in due:
+            dec = self.admission.admit(req, now, self._est_queue_delay(now),
+                                       retry=True)
+            if dec.admitted:
+                self.readmitted += 1
+                self.sched.submit(req, now=now)
+            elif dec.reason != "defer":
                 req.state = RequestState.FAILED
                 req.finish_time = now
                 self.shed.append(req)
-                return
-        self.sched.submit(req, now=now)
 
     def run(self, requests: list[Request], max_steps: int = 100_000) -> list[Request]:
         """Serve every request to completion; returns finished requests."""
@@ -178,6 +198,7 @@ class ServingEngine:
                 pi += 1
             if len(self.finished) + len(self.shed) >= n_total:
                 break
+            self._pump_retries(now)
             if hasattr(self.sched, "maybe_reoptimize"):
                 self.sched.maybe_reoptimize(now)
             self._admit(now)
@@ -341,6 +362,9 @@ class ServingEngine:
         return {
             "finished": len(self.finished),
             "shed": len(self.shed),
+            "readmitted": self.readmitted,
+            "admission": (self.admission.stats()
+                          if self.admission is not None else {}),
             "elapsed_s": elapsed,
             "tok_per_s": toks / max(elapsed, 1e-9),
             "req_per_s": len(self.finished) / max(elapsed, 1e-9),

@@ -4,8 +4,6 @@ keeps activation memory flat at large global batch)."""
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # engine/train resume roundtrips
+
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_smoke_config
 from repro.models.transformer import MoECtx

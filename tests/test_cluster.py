@@ -1,6 +1,5 @@
 """Cluster data plane: routing, disaggregation, admission, failure paths."""
 
-import copy
 
 import numpy as np
 import pytest

@@ -1,0 +1,323 @@
+"""Reactive control plane: SLO-burn autoscaler, incremental router state
+cache, admission v2 (re-admission queue + per-class token budgets)."""
+
+import copy
+
+import pytest
+
+from repro.cluster import (AdmissionConfig, AdmissionController,
+                           AutoscalerConfig, ClusterSimulator, EWSJFRouter,
+                           ReplicaModel, SLOBurnAutoscaler, SLOClass,
+                           classify_by_length, make_fleet, make_router)
+from repro.core import (CostModel, EWSJFConfig, EWSJFScheduler, FCFSScheduler,
+                        Request, WorkloadSpec)
+
+
+def cost_model():
+    return CostModel(mfu=0.15, hbm_eff=0.7)
+
+
+def ewsjf_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=32, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+def burst_workload(rate=30.0, n=300, tail_n=80, tail_rate=4.0, seed=0):
+    """A hard burst followed by a light tail (recovery phase)."""
+    wl = WorkloadSpec(n_requests=n, arrival_rate=rate, seed=seed).generate()
+    tail = WorkloadSpec(n_requests=tail_n, arrival_rate=tail_rate,
+                        seed=seed + 1).generate()
+    t0 = wl[-1].arrival_time
+    for r in tail:
+        r.arrival_time += t0
+    return wl + tail
+
+
+# ---------------------------------------------------------------------------
+# Incremental router state cache
+# ---------------------------------------------------------------------------
+
+class TestRouterCache:
+    def _loaded_fleet(self, n=3, waiting=400):
+        cost = cost_model()
+        fleet = [ReplicaModel(i, cost, scheduler=ewsjf_factory())
+                 for i in range(n)]
+        warm = WorkloadSpec(n_requests=waiting * n, arrival_rate=1e4,
+                            seed=7).generate()
+        for i, req in enumerate(warm):
+            fleet[i % n].submit(req, req.arrival_time)
+        for rep in fleet:
+            rep.sched.maybe_reoptimize(1.0, force=True)
+        return fleet, cost
+
+    def test_cached_costs_match_fresh_after_invalidation(self):
+        """Cached route costs equal the freshly computed ``route_cost`` both
+        before and after event-driven invalidation (submit/dispatch)."""
+        f1, cost = self._loaded_fleet()
+        f2 = copy.deepcopy(f1)
+        cached = EWSJFRouter(cost=cost, use_cache=True)
+        fresh = EWSJFRouter(cost=cost, use_cache=False)
+        probe = WorkloadSpec(n_requests=60, arrival_rate=40.0,
+                             seed=9).generate()
+        for req in probe:
+            now = 1.5 + req.arrival_time
+            for r1, r2 in zip(f1, f2):
+                c1 = cached.route_cost(r1, req, now)
+                c2 = fresh.route_cost(r2, req, now)
+                assert c1 == pytest.approx(c2, rel=1e-9, abs=1e-12)
+            # mutate one replica (enqueue event → delta publication) and one
+            # dispatch (tick event), then costs must still agree
+            pick = cached.select(f1, req, now)
+            pick.submit(req, now)
+            f2[pick.replica_id].submit(copy.copy(req), now)
+
+    def test_cached_and_fresh_routing_decisions_identical(self):
+        f1, cost = self._loaded_fleet()
+        f2 = copy.deepcopy(f1)
+        cached = EWSJFRouter(cost=cost, use_cache=True)
+        fresh = EWSJFRouter(cost=cost, use_cache=False)
+        arrivals = WorkloadSpec(n_requests=120, arrival_rate=50.0,
+                                seed=3).generate()
+        for req in arrivals:
+            now = 1.5 + req.arrival_time
+            a = cached.select(f1, req, now)
+            b = fresh.select(f2, copy.copy(req), now)
+            assert a.replica_id == b.replica_id
+            a.submit(req, now)
+            f2[b.replica_id].submit(copy.copy(req), now)
+
+    def test_cached_snapshot_survives_bubble_carve(self):
+        """Bubble creation moves waiting requests between queues; the moved
+        requests must be re-labelled (queue_id) so later dispatch deltas
+        patch the right cached entry (regression: stale queue_id left the
+        carved-from queue's cached aggregates permanently wrong)."""
+        from repro.core.batch_builder import BatchBudget
+        from repro.core.types import QueueBounds, SchedulerPolicy, MetaParams
+        s = EWSJFScheduler(
+            EWSJFConfig(min_history=10_000),    # keep the seeded partition
+            initial_policy=SchedulerPolicy(
+                boundaries=[QueueBounds(0.0, 200.0),
+                            QueueBounds(200.0, 600.0),
+                            QueueBounds(600.0, float("inf"))],
+                meta=MetaParams()))
+        for plen in (100, 560, 700):
+            s.submit(Request(prompt_len=plen, arrival_time=0.0), now=0.0)
+        s.snapshot_cached(0.1)                  # prime the cache
+        # arrival in the observed gap carves a bubble; 560 moves to a tail
+        s.submit(Request(prompt_len=430, arrival_time=0.2), now=0.2)
+        for _ in range(6):                      # dispatch everything
+            if not s.tick(0.5, BatchBudget(max_requests=1,
+                                           max_tokens=10_000)).requests:
+                break
+        cached, fresh = s.snapshot_cached(0.9), s.snapshot(0.9)
+        assert cached.waiting == fresh.waiting == 0
+        assert [(q.queue_id, q.depth, q.tokens) for q in cached.queues] == \
+               [(q.queue_id, q.depth, q.tokens) for q in fresh.queues]
+
+    def test_version_bumps_on_mutations(self):
+        s = ewsjf_factory()
+        v0 = s.version
+        s.submit(Request(prompt_len=64, arrival_time=0.0), now=0.0)
+        assert s.version > v0
+        v1 = s.version
+        snap1 = s.snapshot_cached(0.5)
+        assert s.snapshot_cached(0.5) is snap1      # no mutation → same obj
+        s.drain()
+        assert s.version > v1
+        assert s.snapshot_cached(0.6).waiting == 0
+
+    def test_fcfs_incremental_token_sum(self):
+        s = FCFSScheduler()
+        for plen in (100, 200, 300):
+            s.submit(Request(prompt_len=plen, arrival_time=0.0), now=0.0)
+        assert s.snapshot(0.0).waiting_tokens == 600
+        from repro.core.batch_builder import BatchBudget
+        s.tick(0.0, BatchBudget(max_requests=1, max_tokens=10_000))
+        assert s.snapshot(0.0).waiting_tokens == 500
+        s.drain()
+        assert s.snapshot(0.0).waiting_tokens == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO-burn autoscaler
+# ---------------------------------------------------------------------------
+
+class TestAutoscaler:
+    def test_scales_up_on_sustained_burn_and_down_after_cooldown(self):
+        """Control-loop unit test: sustained interactive burn above the
+        threshold adds replicas (after patience), sustained low burn drains
+        one — but only after the cooldown elapses."""
+        cost = cost_model()
+        fleet = make_fleet(2, cost, scheduler_factory=FCFSScheduler)
+        asc = SLOBurnAutoscaler(
+            scheduler_factory=FCFSScheduler,
+            cfg=AutoscalerConfig(min_replicas=1, max_replicas=4,
+                                 up_patience=2, down_patience=3,
+                                 cooldown_up=0.5, cooldown_down=2.0))
+        # sustained burn: interactive delay 3x its 1s budget
+        asc.ingest([(64.0, 0, 3.0)])
+        assert asc.decide(fleet, 0.0) is None          # patience not met
+        asc.ingest([(64.0, 0, 3.0)])
+        assert asc.decide(fleet, 0.25) == "up"
+        fleet.append(ReplicaModel(2, cost, scheduler=FCFSScheduler()))
+        asc.note_scaled("up", fleet[-1], 0.25)
+        # burn still high but cooldown not elapsed → hold
+        asc.ingest([(64.0, 0, 3.0)])
+        asc.ingest([(64.0, 0, 3.0)])
+        assert asc.decide(fleet, 0.5) is None
+        # idle: burn decays to ~0 via implicit zero-samples; interim "up"s
+        # (burn still above threshold) are applied until the signal cools
+        t, act, last_scale = 0.75, None, 0.25
+        while t < 20.0:
+            asc.ingest([])
+            act = asc.decide(fleet, t)
+            if act == "down":
+                break
+            if act == "up":
+                fleet.append(ReplicaModel(len(fleet), cost,
+                                          scheduler=FCFSScheduler()))
+                asc.note_scaled("up", fleet[-1], t)
+                last_scale = t
+            t += 0.25
+        assert act == "down"
+        assert t - last_scale >= 2.0                   # cooldown respected
+        victim = asc.drain_candidate(fleet)
+        assert victim is not None
+
+    def test_drain_candidate_never_strands_a_role(self):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, roles=["prefill", "decode"])
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(min_replicas=1))
+        assert asc.drain_candidate(fleet) is None
+
+    def test_burst_recovery_within_slo_budget(self):
+        """Acceptance: with the autoscaler enabled (no scripted scale-up), a
+        burst scenario recovers interactive mean TTFT to within its SLO
+        budget once the fleet has reacted."""
+        cost = cost_model()
+        wl = burst_workload()
+        fleet = make_fleet(1, cost, scheduler_factory=ewsjf_factory)
+        asc = SLOBurnAutoscaler(
+            scheduler_factory=ewsjf_factory,
+            cfg=AutoscalerConfig(max_replicas=6, cooldown_up=0.5,
+                                 up_patience=1))
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                               autoscaler=asc)
+        res = sim.run(wl)
+        assert len(res.finished) == len(wl)            # nothing lost
+        ups = [e for e in res.autoscale["events"] if e[1] == "up"]
+        assert len(ups) >= 2                           # it actually reacted
+        assert res.autoscale["scale_downs"] >= 1       # and relaxed after
+        # recovery phase: arrivals once the fleet has settled post scale-up
+        settle = max(e[0] for e in ups) + 1.0
+        budget = 1.0                                   # interactive TTFT SLO
+        rec = [r.ttft for r in res.finished
+               if classify_by_length(r) == "interactive"
+               and r.ttft is not None and r.arrival_time >= settle]
+        assert len(rec) >= 20
+        assert sum(rec) / len(rec) <= budget
+
+
+# ---------------------------------------------------------------------------
+# Admission v2: re-admission queue + per-class token budgets
+# ---------------------------------------------------------------------------
+
+class TestAdmissionV2:
+    def test_defer_then_readmit_not_double_counted(self):
+        """A request deferred under load and admitted on retry counts once
+        in ``admitted`` (plus once in ``readmitted``), never in ``shed``."""
+        adm = AdmissionController(config=AdmissionConfig(
+            retry_capacity=8, retry_backoff=0.1, retry_ttl=30.0))
+        req = Request(prompt_len=2000, arrival_time=0.0)   # batch class
+        dec = adm.admit(req, 0.0, est_delay=1e6)
+        assert not dec.admitted and dec.reason == "defer"
+        assert adm.retry_pending() == 1
+        due, expired = adm.due_retries(0.2)
+        assert due == [req] and not expired
+        dec2 = adm.admit(req, 0.2, est_delay=0.0, retry=True)
+        assert dec2.admitted
+        st = adm.stats()
+        assert st["admitted"]["batch"] == 1
+        assert st["readmitted"]["batch"] == 1
+        assert st["deferred"]["batch"] == 1
+        assert st["shed"]["batch"] == 0
+        assert st["retry_pending"] == 0
+
+    def test_retry_expires_into_permanent_shed(self):
+        classes = (SLOClass("interactive", 1.0, None, 2, sheddable=False),
+                   SLOClass("standard", 5.0, 1.0),      # 1s deadline
+                   SLOClass("batch", 60.0, None))
+        adm = AdmissionController(
+            classes=classes,
+            classify=lambda r: "standard",
+            config=AdmissionConfig(retry_capacity=8, retry_backoff=0.1))
+        req = Request(prompt_len=100, arrival_time=0.0)
+        assert adm.admit(req, 0.0, est_delay=1e6).reason == "defer"
+        due, expired = adm.due_retries(2.0)             # past the deadline
+        assert not due and expired == [req]
+        st = adm.stats()
+        assert st["shed"]["standard"] == 1
+        assert st["admitted"]["standard"] == 0
+
+    def test_bounded_retry_queue_overflows_to_shed(self):
+        adm = AdmissionController(config=AdmissionConfig(retry_capacity=2))
+        reqs = [Request(prompt_len=2000, arrival_time=0.0) for _ in range(4)]
+        reasons = [adm.admit(r, 0.0, est_delay=1e6).reason for r in reqs]
+        assert reasons == ["defer", "defer", "shed", "shed"]
+        assert adm.stats()["shed"]["batch"] == 2
+        assert adm.retry_pending() == 2
+
+    def test_token_budget_fair_share_under_saturation(self):
+        """Under saturation, a class that exhausted its weighted token
+        bucket is denied even though its own TTFT budget still fits."""
+        classes = (SLOClass("interactive", 1.0, None, 2, sheddable=False,
+                            weight=4.0),
+                   SLOClass("standard", 1e9, None, 1, weight=3.0),
+                   SLOClass("batch", 1e9, None, 0, weight=1.0))
+        adm = AdmissionController(
+            classes=classes,
+            classify=lambda r: "batch" if r.prompt_len > 256 else "standard",
+            config=AdmissionConfig(retry_capacity=0, token_budget_per_s=4000,
+                                   budget_window=1.0, saturation_delay=0.5))
+        # saturated (est_delay 2.0 > 0.5); both classes within TTFT budget
+        n_std = n_bat = 0
+        for _ in range(20):
+            if adm.admit(Request(prompt_len=500, arrival_time=0.0),
+                         0.0, est_delay=2.0).admitted:
+                n_bat += 1
+            if adm.admit(Request(prompt_len=100, arrival_time=0.0),
+                         0.0, est_delay=2.0).admitted:
+                n_std += 1
+        st = adm.stats()
+        assert st["budget_denied"]["batch"] > 0
+        # weighted shares: standard (weight 3) admits more than batch (1)
+        assert n_std > n_bat
+        # unsaturated traffic is not budget-limited
+        assert adm.admit(Request(prompt_len=500, arrival_time=10.0),
+                         10.0, est_delay=0.0).admitted
+
+    def test_cluster_readmission_end_to_end(self):
+        """Burst overload on one replica: deferred requests re-enter once
+        the queue drains; counters reconcile with no double counting."""
+        cost = cost_model()
+        fleet = make_fleet(1, cost, scheduler_factory=ewsjf_factory)
+        adm = AdmissionController(config=AdmissionConfig(
+            retry_capacity=64, retry_backoff=0.25, retry_ttl=20.0))
+        sim = ClusterSimulator(fleet, make_router("least_loaded", cost), cost,
+                               admission=adm)
+        wl = WorkloadSpec(n_requests=250, arrival_rate=120.0,
+                          short_frac=0.5).generate()
+        res = sim.run(wl)
+        st = res.admission
+        n = len(wl)
+        # every request resolved exactly one way
+        assert len(res.finished) + len(res.shed) + len(res.dropped) == n
+        assert st["retry_pending"] == 0
+        # admitted counts requests once: they either finished or were
+        # deadline-dropped at dispatch
+        assert sum(st["admitted"].values()) == len(res.finished) + len(res.dropped)
+        assert sum(st["shed"].values()) == len(res.shed)
+        # the re-admission queue actually saved work
+        assert res.readmitted > 0
+        assert sum(st["readmitted"].values()) == res.readmitted
+        assert sum(st["readmitted"].values()) <= sum(st["admitted"].values())

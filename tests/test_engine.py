@@ -4,6 +4,8 @@ import numpy as np
 import jax
 import pytest
 
+pytestmark = pytest.mark.slow  # real JAX serving-engine execution
+
 from repro.configs import get_smoke_config
 from repro.core import (EWSJFConfig, EWSJFScheduler, FCFSScheduler, Request)
 from repro.models import init_params

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # Pallas interpret-mode kernel sweeps
+
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.ssd_scan.ops import ssd

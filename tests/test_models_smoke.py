@@ -6,8 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # Per-architecture forward/train steps compile real models
+
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.models import (DtypePolicy, MoECtx, decode_step, init_decode_caches,
+from repro.models import (DtypePolicy, MoECtx, decode_step,
                           init_params, pad_prefill_caches, prefill, train_loss)
 
 F32 = DtypePolicy(jnp.float32, jnp.float32, jnp.float32)

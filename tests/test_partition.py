@@ -1,7 +1,6 @@
 """Refine-and-Prune (paper SS4.2): unit + property tests."""
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                      # container lacks hypothesis

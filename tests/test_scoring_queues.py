@@ -1,7 +1,5 @@
 """Scoring (Eq. 1/4, Thm A.1) + dispatcher/bubble queues (Alg. 2)."""
 
-import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                      # container lacks hypothesis

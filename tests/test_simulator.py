@@ -3,7 +3,6 @@
 import copy
 
 import numpy as np
-import pytest
 
 from repro.core import (CostModel, EngineParams, EWSJFConfig, EWSJFScheduler,
                         FCFSScheduler, ServingSimulator, SJFScheduler,

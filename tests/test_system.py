@@ -3,8 +3,9 @@ the paper's headline claims exercised through the full stack."""
 
 import copy
 
-import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # full-stack system claims (mesh dry-runs, long sims)
 
 from repro.core import (CostModel, EngineParams, EWSJFConfig, EWSJFScheduler,
                         FCFSScheduler, ServingSimulator, SJFScheduler,

@@ -1,6 +1,10 @@
 """Training substrate: loss decreases, microbatch-accumulation equivalence,
 optimizer math."""
 
+import pytest
+
+pytestmark = pytest.mark.slow  # real JAX training steps
+
 import numpy as np
 import jax
 import jax.numpy as jnp
