@@ -1,0 +1,105 @@
+"""CI bench-regression gate: compare a freshly produced quick-bench
+artifact (``BENCH_cluster.json``) against the committed baseline.
+
+The gated metrics are the *deterministic* discrete-event-simulator outputs
+— per-scenario/per-router short-request mean TTFT (higher is worse) and
+token throughput (lower is worse).  Wall-clock sections (the control-plane
+overhead microbenchmark) are machine-dependent and deliberately not gated.
+
+    python -m benchmarks.check_regression \
+        --baseline benchmarks/baselines/BENCH_cluster.json \
+        --current BENCH_cluster.json [--tolerance 0.15]
+
+Exit 0 when every gated metric is within tolerance, 1 otherwise (each
+violation printed).  The CI quick lane runs this on every PR; apply the
+``bench-baseline-update`` label to skip the gate when a PR intentionally
+moves the baseline (then commit the new artifact under
+``benchmarks/baselines/``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric leaf-name -> direction ("min": regression when it rises,
+# "max": regression when it falls)
+GATED = {"short_ttft_mean": "min", "tok_per_s": "max"}
+ABS_FLOOR = 1e-6          # ignore ratios against ~zero baselines
+
+
+def _walk(tree: dict, path: tuple = ()):
+    for key, val in sorted(tree.items()):
+        if isinstance(val, dict):
+            yield from _walk(val, path + (key,))
+        elif key in GATED and isinstance(val, (int, float)):
+            yield path + (key,), float(val)
+
+
+def _lookup(tree: dict, path: tuple):
+    node = tree
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
+    """Returns a list of human-readable violations (empty = gate passes)."""
+    violations: list[str] = []
+    base_scen = baseline.get("scenarios", {})
+    cur_scen = current.get("scenarios", {})
+    for path, base_val in _walk(base_scen):
+        cur_val = _lookup(cur_scen, path)
+        name = "/".join(path)
+        if cur_val is None:
+            violations.append(f"{name}: present in baseline, missing in "
+                              f"current artifact")
+            continue
+        if abs(base_val) < ABS_FLOOR:
+            continue
+        direction = GATED[path[-1]]
+        ratio = float(cur_val) / base_val
+        if direction == "min" and ratio > 1.0 + tolerance:
+            violations.append(
+                f"{name}: {cur_val:.4f} vs baseline {base_val:.4f} "
+                f"(+{(ratio - 1) * 100:.1f}% > +{tolerance * 100:.0f}%)")
+        elif direction == "max" and ratio < 1.0 - tolerance:
+            violations.append(
+                f"{name}: {cur_val:.4f} vs baseline {base_val:.4f} "
+                f"({(ratio - 1) * 100:.1f}% < -{tolerance * 100:.0f}%)")
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative regression (default 15%%)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    violations = compare(baseline, current, args.tolerance)
+    n_checked = sum(1 for _ in _walk(baseline.get("scenarios", {})))
+    if violations:
+        print(f"BENCH REGRESSION GATE: {len(violations)} violation(s) "
+              f"(checked {n_checked} metrics, tolerance "
+              f"{args.tolerance * 100:.0f}%):")
+        for v in violations:
+            print(f"  FAIL {v}")
+        print("If this movement is intended, apply the "
+              "'bench-baseline-update' label and refresh "
+              "benchmarks/baselines/BENCH_cluster.json in the PR.")
+        return 1
+    print(f"bench regression gate OK: {n_checked} metrics within "
+          f"{args.tolerance * 100:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,10 +31,10 @@ def main(argv=None) -> None:
         os.environ.setdefault("BENCH_SCALE", "0.01")
 
     from . import (bench_cluster_routing, bench_kernels, bench_meta_optimizer,
-                   bench_padding, bench_scheduler_overhead,
-                   bench_table3_queue_count, bench_table10_summary,
-                   bench_tables4to7_load, bench_tables8to9_regimes,
-                   bench_ttft_starvation)
+                   bench_padding, bench_policy_store,
+                   bench_scheduler_overhead, bench_table3_queue_count,
+                   bench_table10_summary, bench_tables4to7_load,
+                   bench_tables8to9_regimes, bench_ttft_starvation)
     sections = [
         ("Table 3 (queue count)", bench_table3_queue_count.main),
         ("Tables 4-7 / Fig 3 (load sweep)", bench_tables4to7_load.main),
@@ -46,6 +46,8 @@ def main(argv=None) -> None:
         ("TPU padding waste (beyond-paper)", bench_padding.main),
         ("Cluster routing + control plane (beyond-paper)",
          lambda: bench_cluster_routing.main(quick=args.quick)),
+        ("Fleet policy store (beyond-paper)",
+         lambda: bench_policy_store.main(quick=args.quick)),
         ("Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()

@@ -11,7 +11,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.cluster import (AdmissionConfig, AdmissionController,
-                           AutoscalerConfig, ClusterSimulator, ScenarioEvent,
+                           AutoscalerConfig, ClusterSimulator, PolicyStore,
+                           PolicyStoreConfig, ScenarioEvent,
                            SLOBurnAutoscaler, make_fleet, make_router)
 from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, WorkloadSpec
 
@@ -92,6 +93,29 @@ def main() -> None:
           f"final burn {{{', '.join(f'{k}={v:.2f}' for k, v in res.autoscale['burn'].items())}}}")
     for t, action, rid in res.autoscale["events"]:
         print(f"   t={t:6.2f}s scale-{action} (replica {rid})")
+
+    print("\n== scenario 4: fleet strategic plane (shared policy store, "
+          "warm-started scale-up)")
+    store = PolicyStore(PolicyStoreConfig(sync_interval=2.0,
+                                          local_adaptation=0.25))
+    fleet = make_fleet(3, cost, scheduler_factory=scheduler_factory)
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           policy_store=store)
+    wl = WorkloadSpec(n_requests=400, arrival_rate=24.0, seed=4).generate()
+    t_add = wl[len(wl) // 2].arrival_time
+    res = sim.run(wl, scenario=[
+        ScenarioEvent(time=t_add, action="add_replica",
+                      scheduler_factory=scheduler_factory)])
+    print_result(res)
+    print(f"   policy store: epoch {res.policy['epoch']} | "
+          f"{res.policy['n_queues']} global queues | "
+          f"{res.policy['n_trials']} pooled trials | "
+          f"{res.policy['merges']} merges")
+    new = sim.replicas[-1]
+    print(f"   replica {new.replica_id} scaled up at t={t_add:.2f}s with a "
+          f"warm-started policy (no single-queue relearning); by end of "
+          f"run it tracks fleet epoch {new.sched.adopted_epoch} "
+          f"({len(new.sched.manager.queues)} queues)")
 
 
 if __name__ == "__main__":

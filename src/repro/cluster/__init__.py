@@ -18,6 +18,8 @@ from .admission import (DEFAULT_SLO_CLASSES, AdmissionConfig,
 from .autoscaler import AutoscalerConfig, ScaleEvent, SLOBurnAutoscaler
 from .disagg import HandoffChannel, KVHandoff
 from .health import HealthConfig, HealthMonitor
+from .policy_store import (GlobalPolicy, PolicyStore, PolicyStoreConfig,
+                           ReplicaObservation)
 from .replica import ReplicaModel, ReplicaParams
 from .router import (EWSJFRouter, LeastLoadedRouter, RoundRobinRouter,
                      Router, make_router)
@@ -49,6 +51,7 @@ __all__ = [
     "AutoscalerConfig", "ScaleEvent", "SLOBurnAutoscaler",
     "HandoffChannel", "KVHandoff",
     "HealthConfig", "HealthMonitor",
+    "GlobalPolicy", "PolicyStore", "PolicyStoreConfig", "ReplicaObservation",
     "ReplicaModel", "ReplicaParams",
     "Router", "RoundRobinRouter", "LeastLoadedRouter", "EWSJFRouter",
     "make_router",

@@ -80,10 +80,17 @@ class AdmissionConfig:
     retry_capacity: int = 256        # bounded; overflow sheds permanently
     retry_backoff: float = 0.1       # seconds between attempts per request
     retry_ttl: float = 30.0          # retry window for deadline-None classes
-    # --- per-class token budgets (0 disables) ---
+    # --- per-class token budgets (0 disables, unless adaptive_refill) ---
     token_budget_per_s: float = 0.0  # cluster token capacity shared by weight
     budget_window: float = 1.0       # bucket burst horizon (seconds of rate)
     saturation_delay: float = 1.0    # budgets enforced above this est. delay
+    # --- adaptive refill (ROADMAP gap: derive capacity from measurement) ---
+    # When set, the bucket refill rate tracks the *measured* fleet
+    # throughput (HealthMonitor token-rate EWMA, via ``set_measured_rate``)
+    # instead of the fixed configured capacity; ``token_budget_per_s`` then
+    # only seeds the buckets until the first measurement lands.
+    adaptive_refill: bool = False
+    refill_headroom: float = 1.0     # measured rate × headroom = budget rate
 
 
 @dataclass
@@ -132,13 +139,31 @@ class AdmissionController:
         # re-admission queue (bounded) + ids currently/ever deferred
         self._retry_q: deque[_RetryEntry] = deque()
         self._deferred_ids: set[int] = set()
-        # per-class token buckets (weighted fair share of token_budget_per_s)
-        total_w = sum(c.weight for c in classes) or 1.0
-        self._rates = {c.name: self.cfg.token_budget_per_s * c.weight / total_w
+        # per-class token buckets (weighted fair share of the budget rate —
+        # the configured capacity, or the measured fleet throughput once
+        # adaptive_refill observes one)
+        self._total_w = sum(c.weight for c in classes) or 1.0
+        self._budget_rate = self.cfg.token_budget_per_s
+        self._rates = {c.name: self._budget_rate * c.weight / self._total_w
                        for c in classes}
         self._buckets = {n: self._rates[n] * self.cfg.budget_window
                          for n in names}
         self._bucket_t = 0.0
+
+    def set_measured_rate(self, tokens_per_s: float) -> None:
+        """Adaptive refill: retarget the per-class bucket rates at the
+        measured fleet throughput (× headroom).  No-op unless
+        ``adaptive_refill`` is set and the measurement is positive; existing
+        bucket levels are clipped to the new burst caps so a rate *drop*
+        takes effect immediately."""
+        if not self.cfg.adaptive_refill or tokens_per_s <= 0:
+            return
+        self._budget_rate = tokens_per_s * self.cfg.refill_headroom
+        for name in self._rates:
+            w = self.classes[name].weight
+            self._rates[name] = self._budget_rate * w / self._total_w
+            cap = self._rates[name] * self.cfg.budget_window
+            self._buckets[name] = min(self._buckets[name], cap)
 
     def slo_of(self, req: Request) -> SLOClass:
         return self.classes[self._classify(req)]
@@ -168,7 +193,7 @@ class AdmissionController:
         """Arrival-time (or retry-time) decision given the cluster's
         best-case queue delay estimate (the router's min route cost)."""
         slo = self.slo_of(req)
-        budgets_on = self.cfg.token_budget_per_s > 0
+        budgets_on = self._budget_rate > 0
         if budgets_on:
             self._refill(now)
         # 1) Weighted fair share under saturation: a class that exhausted
@@ -262,4 +287,5 @@ class AdmissionController:
                 "deferred": dict(self.deferred),
                 "readmitted": dict(self.readmitted),
                 "budget_denied": dict(self.budget_denied),
+                "budget_rate": self._budget_rate,
                 "retry_pending": len(self._retry_q)}

@@ -64,8 +64,13 @@ class SLOBurnAutoscaler:
     def __init__(self, scheduler_factory: Callable[[], BaseScheduler] = FCFSScheduler,
                  classes=DEFAULT_SLO_CLASSES,
                  classify: Optional[Callable[[Request], str]] = None,
-                 cfg: AutoscalerConfig | None = None):
+                 cfg: AutoscalerConfig | None = None,
+                 policy_store=None):
         self.scheduler_factory = scheduler_factory
+        # Optional fleet PolicyStore: scale-up schedulers are warm-started
+        # from the current global policy instead of defaults (the cluster
+        # simulator wires its own store here when the caller didn't).
+        self.policy_store = policy_store
         self.classes = {c.name: c for c in classes}
         self._classify = classify or classify_by_length
         self.cfg = cfg or AutoscalerConfig()
@@ -136,6 +141,18 @@ class SLOBurnAutoscaler:
                 and now - self._last_scale >= self.cfg.cooldown_down):
             return "down"
         return None
+
+    def make_scheduler(self, now: float = 0.0) -> BaseScheduler:
+        """Build the scheduler for a scale-up replica: the configured
+        factory, warm-started from the fleet's current global policy when a
+        store is attached (``PolicyStore.warm_start`` — the same single
+        implementation the cluster simulator's ``add_replica`` uses, so the
+        two scale-up paths can never diverge).  A fresh replica should not
+        relearn queue boundaries the fleet already knows."""
+        sched = self.scheduler_factory()
+        if self.policy_store is not None:
+            self.policy_store.warm_start(sched, now=now)
+        return sched
 
     def drain_candidate(self, replicas: list[ReplicaModel]
                         ) -> Optional[ReplicaModel]:

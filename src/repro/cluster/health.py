@@ -23,6 +23,7 @@ class HealthConfig:
     heartbeat_timeout: float = 5.0
     straggler_factor: float = 3.0
     check_interval: float = 1.0
+    throughput_alpha: float = 0.3    # fleet token-rate EWMA smoothing
 
 
 class HealthMonitor:
@@ -31,9 +32,33 @@ class HealthMonitor:
         self.failures: list[int] = []
         self.stragglers: list[int] = []
         self._last_check = 0.0
+        # Measured fleet throughput (tokens/s EWMA over check intervals):
+        # feeds the admission layer's adaptive token-bucket refill.
+        self.tok_rate_ewma = 0.0
+        self._tok_seen = 0
+        self._tok_t: float | None = None
 
     def due(self, now: float) -> bool:
         return now - self._last_check >= self.cfg.check_interval
+
+    def observe_throughput(self, replicas: Iterable[ReplicaModel],
+                           now: float) -> float:
+        """Fold the fleet's cumulative generated-token counters into the
+        token-rate EWMA.  Call once per check round (the cluster simulator
+        does); returns the current EWMA."""
+        total = sum(r.tokens_out for r in replicas)
+        if self._tok_t is None:
+            self._tok_seen, self._tok_t = total, now
+            return self.tok_rate_ewma
+        dt = now - self._tok_t
+        if dt <= 0:
+            return self.tok_rate_ewma
+        rate = (total - self._tok_seen) / dt
+        a = self.cfg.throughput_alpha
+        self.tok_rate_ewma = (rate if self.tok_rate_ewma <= 0
+                              else (1 - a) * self.tok_rate_ewma + a * rate)
+        self._tok_seen, self._tok_t = total, now
+        return self.tok_rate_ewma
 
     def check(self, replicas: Iterable[ReplicaModel], now: float
               ) -> tuple[list[ReplicaModel], list[ReplicaModel]]:

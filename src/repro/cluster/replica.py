@@ -93,6 +93,8 @@ class ReplicaModel:
         self.preemptions = 0
         self.ticks = 0
         self.busy_time = 0.0
+        self.tokens_out = 0          # cumulative generated tokens (throughput
+                                     # telemetry for the health monitor EWMA)
         # Queue-delay observations (arrival→prefill-dispatch wait) consumed
         # by the control plane (health monitor → SLO-burn autoscaler).
         # Bounded: stale samples age out if nobody drains them.
@@ -340,6 +342,7 @@ class ReplicaModel:
         req.state = RequestState.FINISHED
         req.finish_time = t
         self.finished.append(req)
+        self.tokens_out += req.generated
         if self.role != "prefill":
             self.served += 1
         self.sched.on_finish(req, t)

@@ -24,6 +24,7 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from ..core.cost_model import CostModel
+from ..core.partition import edge_divergence
 from .replica import ReplicaModel
 
 
@@ -96,7 +97,8 @@ class EWSJFRouter(Router):
                  kv_pressure_knee: float = 0.8,
                  kv_pressure_slope: float = 5.0,
                  contention_horizon: int = 8,
-                 use_cache: bool = True):
+                 use_cache: bool = True,
+                 policy_store=None):
         self.cost = cost or CostModel()
         self.kv_pressure_knee = kv_pressure_knee
         self.kv_pressure_slope = kv_pressure_slope
@@ -104,6 +106,14 @@ class EWSJFRouter(Router):
         # before our queue's head gets picked (bounded lookahead)
         self.contention_horizon = contention_horizon
         self.use_cache = use_cache
+        # Optional fleet PolicyStore: when set, replicas whose installed
+        # partition diverges from the global map pay a mild cost factor
+        # (see _alignment_factor) so routing steers toward structure that
+        # agrees with the fleet policy.
+        self.policy_store = policy_store
+        self.alignment_penalty = 0.25
+        # replica_id -> (installed queue-bounds key, policy epoch, factor)
+        self._align_memo: dict[int, tuple[tuple, int, float]] = {}
         # replica_id -> (scheduler version, {queue_id: (work, capped_work)})
         self._work_memo: dict[int, tuple[int, dict[int, tuple[float, float]]]] = {}
 
@@ -111,11 +121,16 @@ class EWSJFRouter(Router):
         pool = [r for r in replicas if r.accepts_prefill()]
         if not pool:
             return None
-        if len(self._work_memo) > len(replicas):
+        if len(self._work_memo) > len(replicas) \
+                or len(self._align_memo) > len(replicas):
             # evict memo entries for replicas that failed/drained away
+            # (each memo under its own size check: with use_cache=False the
+            # work memo stays empty while the alignment memo still fills)
             live = {r.replica_id for r in replicas}
             self._work_memo = {k: v for k, v in self._work_memo.items()
                                if k in live}
+            self._align_memo = {k: v for k, v in self._align_memo.items()
+                                if k in live}
         return min(pool, key=lambda r: (self.route_cost(r, req, now),
                                         r.replica_id))
 
@@ -137,6 +152,48 @@ class EWSJFRouter(Router):
             self._work_memo[replica.replica_id] = (replica.sched.version,
                                                    works)
         return works
+
+    def _alignment_factor(self, replica: ReplicaModel, snap) -> float:
+        """Fleet-consistency factor from the global partition map: 1.0 when
+        the replica's installed structure matches the fleet policy, growing
+        with the mean relative distance of its interior edges from the
+        global ones.  A diverged replica is about to be restructured by the
+        next broadcast (queue rebuild + re-routing churn), so the router
+        mildly prefers replicas whose structure already agrees with the
+        fleet — keeping routing and per-replica queue structure aligned.
+        Cached per (scheduler version, policy epoch).  NOTE: the request is
+        always *costed* against the local queue it will actually join
+        (interval containment); the global map never overrides that."""
+        pol = self.policy_store.current()
+        if pol is None:
+            return 1.0
+        # Memo key: the installed queue *structure*, not the scheduler's
+        # mutation version — enqueue/dispatch bump the version every
+        # arrival, but the factor only changes on repartition/adoption.
+        key = tuple((q.lo, q.hi) for q in snap.queues)
+        hit = self._align_memo.get(replica.replica_id)
+        if hit is not None and hit[0] == key and hit[1] == pol.epoch:
+            return hit[2]
+        g = [b.hi for b in pol.boundaries[:-1] if b.hi != float("inf")]
+        local = [q.hi for q in snap.queues[:-1] if q.hi != float("inf")]
+        if not g:
+            factor = 1.0               # no global structure to align with
+        elif not local:
+            # A single [0, ∞) queue when the fleet policy has structure is
+            # the *maximally* diverged case (div capped at 1.0) — treating
+            # it as aligned would steer traffic toward the least
+            # structured replica.
+            factor = 1.0 + self.alignment_penalty
+        else:
+            # Symmetric: local→global catches *misplaced* edges, while
+            # global→local catches *missing* ones (a replica whose few
+            # edges all sit on global positions is still under-structured
+            # if the global map has edges it lacks).
+            div = max(edge_divergence(local, g) or 0.0,
+                      edge_divergence(g, local) or 0.0)
+            factor = 1.0 + self.alignment_penalty * min(div, 1.0)
+        self._align_memo[replica.replica_id] = (key, pol.epoch, factor)
+        return factor
 
     def route_cost(self, replica: ReplicaModel, req, now: float) -> float:
         """Estimated start delay for ``req`` if routed to ``replica``."""
@@ -175,6 +232,10 @@ class EWSJFRouter(Router):
         if occ > self.kv_pressure_knee:
             delay *= 1.0 + self.kv_pressure_slope * (occ - self.kv_pressure_knee)
             delay += occ * 1e-3
+        # 5) Fleet-consistency: prefer replicas whose installed partition
+        #    agrees with the global policy map (no-op without a store).
+        if self.policy_store is not None:
+            delay *= self._alignment_factor(replica, snap)
         return delay
 
 

@@ -28,10 +28,11 @@ import numpy as np
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
 from ..core.types import Request, RequestState
-from .admission import AdmissionController
+from .admission import AdmissionController, classify_by_length
 from .autoscaler import SLOBurnAutoscaler
 from .disagg import HandoffChannel
 from .health import HealthConfig, HealthMonitor
+from .policy_store import PolicyStore
 from .replica import ReplicaModel, ReplicaParams
 from .router import EWSJFRouter, Router
 
@@ -63,6 +64,7 @@ class ClusterSimResult:
     health: dict
     admission: dict = field(default_factory=dict)
     autoscale: dict = field(default_factory=dict)
+    policy: dict = field(default_factory=dict)
     readmitted: int = 0
 
     @property
@@ -110,12 +112,14 @@ class ClusterSimulator:
                  admission: Optional[AdmissionController] = None,
                  channel: Optional[HandoffChannel] = None,
                  health: HealthConfig | None = None,
-                 autoscaler: Optional[SLOBurnAutoscaler] = None):
+                 autoscaler: Optional[SLOBurnAutoscaler] = None,
+                 policy_store: Optional[PolicyStore] = None):
         self.replicas: list[ReplicaModel] = list(replicas)
         self.router = router
         self.cost = cost
         self.admission = admission
         self.autoscaler = autoscaler
+        self.policy_store = policy_store
         self.channel = channel or HandoffChannel()
         self.monitor = HealthMonitor(health)
         self.reenqueued = 0
@@ -126,6 +130,14 @@ class ClusterSimulator:
         if admission is not None:
             for rep in self.replicas:
                 rep.drop_fn = admission.expired
+        # One strategic plane: hand the shared store to the router (global
+        # partition map for routing) and the autoscaler (warm starts) unless
+        # the caller wired their own.
+        if policy_store is not None:
+            if isinstance(router, EWSJFRouter) and router.policy_store is None:
+                router.policy_store = policy_store
+            if autoscaler is not None and autoscaler.policy_store is None:
+                autoscaler.policy_store = policy_store
 
     # ---- membership -------------------------------------------------------
 
@@ -138,6 +150,12 @@ class ClusterSimulator:
         rep.last_heartbeat = self.now
         if self.admission is not None:
             rep.drop_fn = self.admission.expired
+        # Warm start: a new replica inherits the fleet's learned policy
+        # instead of relearning from a single [0, ∞) queue (the single
+        # ``PolicyStore.warm_start`` path — autoscaler scale-ups and
+        # scripted add_replica events both land here).
+        if self.policy_store is not None:
+            self.policy_store.warm_start(scheduler, now=self.now)
         self.replicas.append(rep)
         return rep
 
@@ -198,13 +216,41 @@ class ClusterSimulator:
     # ---- control-plane reactions ------------------------------------------
 
     def _handle_failure(self, rep: ReplicaModel) -> None:
+        if self.policy_store is not None:
+            self.policy_store.forget(rep.replica_id)
         for req in rep.fail():
             self.reenqueued += 1
             self._route(req)
 
     def _handle_drain(self, rep: ReplicaModel) -> None:
+        if self.policy_store is not None:
+            self.policy_store.forget(rep.replica_id)
         for req in rep.start_drain():
             self._route(req)
+
+    def _policy_sync(self, now: float) -> None:
+        """One strategic-plane round: publish → merge → broadcast (the
+        shared ``PolicyStore.sync_fleet`` protocol).  Replicas whose
+        scheduler has no strategic loop (FCFS/SJF) are skipped; a replica
+        that already adopted the current epoch is left alone
+        (staleness-versioned epochs make the broadcast idempotent and
+        non-blocking)."""
+        self.policy_store.sync_fleet(
+            ((rep.replica_id, rep.sched, self._class_delays(rep))
+             for rep in self.replicas if rep.schedulable()), now)
+
+    @staticmethod
+    def _class_delays(rep: ReplicaModel, tail: int = 200) -> dict:
+        """Per-SLO-class mean TTFT over the replica's recent finishes
+        (strategic telemetry for the store; read-only)."""
+        acc: dict[str, tuple[float, int]] = {}
+        for r in rep.finished[-tail:]:
+            if r.ttft is None:
+                continue
+            name = classify_by_length(r)
+            m, n = acc.get(name, (0.0, 0))
+            acc[name] = ((m * n + r.ttft) / (n + 1), n + 1)
+        return acc
 
     def _autoscale_tick(self, now: float) -> None:
         """One reactive-control round: fold the health monitor's queue-delay
@@ -212,7 +258,7 @@ class ClusterSimulator:
         self.autoscaler.ingest(self.monitor.delay_samples(self.replicas, now))
         act = self.autoscaler.decide(self.replicas, now)
         if act == "up":
-            rep = self.add_replica(self.autoscaler.scheduler_factory(),
+            rep = self.add_replica(self.autoscaler.make_scheduler(now),
                                    role=self.autoscaler.cfg.role,
                                    speed=self.autoscaler.cfg.speed)
             self.autoscaler.note_scaled("up", rep, now)
@@ -281,6 +327,8 @@ class ClusterSimulator:
                 self._pump_retries(t)
             if self.autoscaler is not None and self.autoscaler.due(t):
                 self._autoscale_tick(t)
+            if self.policy_store is not None and self.policy_store.due(t):
+                self._policy_sync(t)
             if self.backlog:
                 still = []
                 for req in self.backlog:
@@ -291,6 +339,11 @@ class ClusterSimulator:
                         rep.submit(req, t)
                 self.backlog = still
             if self.monitor.due(t):
+                rate = self.monitor.observe_throughput(self.replicas, t)
+                if self.admission is not None:
+                    # adaptive refill: budget rate follows measured fleet
+                    # throughput (no-op unless AdmissionConfig enables it)
+                    self.admission.set_measured_rate(rate)
                 dead, drain = self.monitor.check(self.replicas, t)
                 for rep in dead:
                     self._handle_failure(rep)
@@ -328,6 +381,8 @@ class ClusterSimulator:
                     nxt.append(max(nr, t + 1e-9))
             if self.autoscaler is not None and self._in_system():
                 nxt.append(t + self.autoscaler.cfg.check_interval)
+            if self.policy_store is not None and self._in_system():
+                nxt.append(t + self.policy_store.cfg.sync_interval)
             if nxt:
                 t = max(t + 1e-9, min(nxt))
             elif not stepped:
@@ -349,6 +404,8 @@ class ClusterSimulator:
                        else {}),
             autoscale=(self.autoscaler.stats() if self.autoscaler is not None
                        else {}),
+            policy=(self.policy_store.stats() if self.policy_store is not None
+                    else {}),
             readmitted=self.readmitted)
 
     def _in_system(self) -> int:

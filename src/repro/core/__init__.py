@@ -12,8 +12,9 @@ from .batch_builder import BatchBudget, BatchBuilder, DEFAULT_BUCKETS
 from .cost_model import CostModel, ModelCostParams, make_cost_fn
 from .meta_optimizer import BayesianMetaOptimizer
 from .monitor import Monitor, RewardWeights, reward, reward_terms
-from .partition import (PartitionConfig, kmeans_partition, refine_and_prune,
-                        static_partition, validate_partition)
+from .partition import (PartitionConfig, edge_divergence, kmeans_partition,
+                        pooled_lengths, refine_and_prune, static_partition,
+                        validate_partition, weighted_refine_and_prune)
 from .queues import BubbleConfig, QueueManager, SchedulerQueue
 from .scheduler import (BaseScheduler, EWSJFConfig, EWSJFScheduler,
                         FCFSScheduler, SJFScheduler, StaticPriorityScheduler,
@@ -30,8 +31,9 @@ __all__ = [
     "CostModel", "ModelCostParams", "make_cost_fn",
     "BayesianMetaOptimizer",
     "Monitor", "RewardWeights", "reward", "reward_terms",
-    "PartitionConfig", "kmeans_partition", "refine_and_prune",
-    "static_partition", "validate_partition",
+    "PartitionConfig", "edge_divergence", "kmeans_partition", "pooled_lengths",
+    "refine_and_prune", "static_partition", "validate_partition",
+    "weighted_refine_and_prune",
     "BubbleConfig", "QueueManager", "SchedulerQueue",
     "BaseScheduler", "EWSJFConfig", "EWSJFScheduler", "FCFSScheduler",
     "SJFScheduler", "StaticPriorityScheduler", "make_scheduler",

@@ -87,6 +87,33 @@ class Trial:
     reward: float
 
 
+def _trial_key(theta) -> tuple:
+    """Dedup identity for a trial point: Θ rounded to 6 decimals (scaled
+    units) — the one definition shared by local optimizers and the fleet
+    policy store, so both sides agree on which trials are 'the same'."""
+    return tuple(np.round(np.asarray(theta, dtype=np.float64), 6))
+
+
+def pool_trials(existing, new, cap: int) -> list[tuple[list[float], float]]:
+    """Merge (Θ, reward) observation lists: first-seen wins on duplicate Θ,
+    and over ``cap`` total the lowest-reward entries are dropped (relative
+    order otherwise preserved).  Serializable-tuple domain — used by the
+    fleet policy store and ``BayesianMetaOptimizer.merge_trials``."""
+    out = [(list(t), float(r)) for t, r in existing]
+    seen = {_trial_key(t) for t, _ in out}
+    for theta, r in new:
+        key = _trial_key(theta)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((list(theta), float(r)))
+    if len(out) > cap:
+        keep = sorted(range(len(out)), key=lambda i: out[i][1],
+                      reverse=True)[:cap]
+        out = [out[i] for i in sorted(keep)]
+    return out
+
+
 @dataclass
 class BayesianMetaOptimizer:
     """Suggest → observe loop.  ``suggest()`` returns the next Θ to try;
@@ -141,6 +168,26 @@ class BayesianMetaOptimizer:
     def observe(self, meta: MetaParams, reward: float) -> None:
         self.trials.append(Trial(np.asarray(meta.as_vector(), dtype=np.float64),
                                  float(reward)))
+
+    # ---- fleet-level posterior sharing ------------------------------------
+
+    def export_trials(self) -> list[tuple[list[float], float]]:
+        """Serializable posterior: every (Θ, reward) observation so far.
+        Consumed by the fleet policy store, which pools trials across
+        replicas into one shared surrogate."""
+        return [(t.theta.tolist(), float(t.reward)) for t in self.trials]
+
+    def merge_trials(self, trials, cap: int = 256) -> int:
+        """Fold externally observed (Θ, reward) pairs — e.g. the fleet
+        store's pooled posterior — into this optimizer's trial history via
+        the shared ``pool_trials`` semantics (first-seen dedup, lowest-
+        reward capped, order otherwise preserved so ``converged`` keeps its
+        recency semantics).  Returns the number of trials added."""
+        before = {_trial_key(t.theta) for t in self.trials}
+        pooled = pool_trials(self.export_trials(), trials, cap)
+        self.trials = [Trial(np.asarray(t, dtype=np.float64), r)
+                       for t, r in pooled]
+        return sum(1 for t, _ in pooled if _trial_key(t) not in before)
 
     @property
     def best(self) -> MetaParams | None:

@@ -50,11 +50,15 @@ class Monitor:
         self.short_threshold = short_threshold
         self.total_finished = 0
         self.total_tokens_out = 0
+        # True arrival count (the history deque is capped): the fleet policy
+        # store weighs each replica's pooled sample by this.
+        self.total_arrivals = 0
 
     # ---- ingestion ------------------------------------------------------
 
     def observe_arrival(self, req: Request) -> None:
         self.history.append(float(req.prompt_len))
+        self.total_arrivals += 1
 
     def observe_finish(self, req: Request) -> None:
         self.window.append(req)

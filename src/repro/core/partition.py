@@ -222,6 +222,69 @@ def clusters_to_bounds(clusters: list[np.ndarray]) -> list[QueueBounds]:
     return [QueueBounds(edges[i], edges[i + 1]) for i in range(len(clusters))]
 
 
+def pooled_lengths(pools, weights=None, cap: int = 50_000,
+                   seed: int = 0) -> np.ndarray:
+    """Weighted pooling of per-replica length samples (fleet-level strategic
+    plane).  Each pool is resampled to a share of ``cap`` proportional to its
+    weight (its replica's true arrival count, not the capped sample size), so
+    high-traffic replicas dominate the merged distribution while the merge
+    cost stays bounded regardless of fleet size.  Deterministic given
+    ``seed``."""
+    pools = [np.asarray(p, dtype=np.float64) for p in pools]
+    if weights is None:
+        w = np.asarray([len(p) for p in pools], dtype=np.float64)
+    else:
+        w = np.asarray(list(weights), dtype=np.float64)
+        if len(w) != len(pools):
+            raise ValueError(f"{len(weights)} weights for {len(pools)} pools")
+    # drop empty pools *and their weights together* so an explicit weight
+    # list stays aligned with the pools it describes
+    keep = [i for i, p in enumerate(pools) if len(p)]
+    pools = [pools[i] for i in keep]
+    if not pools:
+        return np.empty(0, dtype=np.float64)
+    w = np.where(w[keep] > 0, w[keep], 0.0)
+    if w.sum() <= 0:
+        w = np.asarray([len(p) for p in pools], dtype=np.float64)
+    total = int(min(cap, sum(len(p) for p in pools)))
+    shares = np.maximum(1, np.round(total * w / w.sum()).astype(int))
+    rng = np.random.default_rng(seed)
+    parts = []
+    for p, n in zip(pools, shares):
+        if len(p) <= n:
+            parts.append(p)                    # keep everything we have
+        else:
+            parts.append(rng.choice(p, size=n, replace=False))
+    return np.sort(np.concatenate(parts))
+
+
+def weighted_refine_and_prune(pools, weights=None,
+                              cfg: PartitionConfig | None = None,
+                              cap: int = 50_000, seed: int = 0
+                              ) -> list[QueueBounds]:
+    """Fleet-level Refine-and-Prune: merge per-replica length distributions
+    (weighted by each replica's arrival volume) and partition the pooled
+    distribution.  This is the global half of the shared policy store — a
+    single queue structure every replica can adopt."""
+    return refine_and_prune(pooled_lengths(pools, weights, cap=cap,
+                                           seed=seed), cfg)
+
+
+def edge_divergence(local_edges, global_edges) -> float | None:
+    """Mean relative distance from each local interior edge to its nearest
+    global one — the one divergence definition shared by the policy store
+    (operator signal), the EWSJF router (alignment penalty), and the
+    policy-store benchmark.  Infinite edges are ignored; returns None when
+    either side has no finite interior edges (no structure to compare)."""
+    g = np.asarray([e for e in global_edges if e != float("inf")],
+                   dtype=np.float64)
+    loc = [e for e in local_edges if e != float("inf")]
+    if not len(g) or not loc:
+        return None
+    return float(np.mean([np.min(np.abs(g - e)) / max(e, 1.0)
+                          for e in loc]))
+
+
 def kmeans_partition(prompt_lengths, k: int) -> list[QueueBounds]:
     """Baseline partitioner: plain k-means with fixed k (paper Table 3's
     'EWSJF (K-Means)' rows)."""

@@ -37,6 +37,10 @@ class BaseScheduler:
     # caches (router cost memos, replica snapshot caches) key on it for
     # event-driven invalidation instead of rebuilding per arrival.
     version = 0
+    # Epoch of the last fleet policy adopted from a shared PolicyStore
+    # (−1 = never; only policies implementing ``adopt_global_policy``
+    # participate in fleet-level sync).
+    adopted_epoch = -1
 
     def _publish(self) -> None:
         """Delta-publication hook: mark the scheduler state as changed."""
@@ -226,6 +230,10 @@ class EWSJFScheduler(BaseScheduler):
         self._trial_token_mark = 0
         self.tick_count = 0
         self.reopt_count = 0
+        # reopt_count at the moment of the last fleet-policy adoption: the
+        # policy store re-broadcasts (same epoch) once this falls behind,
+        # so local repartitions between epochs still get re-aligned.
+        self._reopt_at_adopt = -1
         # Incrementally-maintained snapshot (cluster routing cache): rebuilt
         # only on structural changes, patched in place on submit/dispatch,
         # head scores refreshed lazily per access time.
@@ -477,6 +485,105 @@ class EWSJFScheduler(BaseScheduler):
             q.bounds = QueueBounds(q.bounds.lo, new_hi)
             nxt.bounds = QueueBounds(new_hi, nxt.bounds.hi)
         self._mark_snapshot_dirty()
+
+    # ---- fleet-level strategic plane (shared policy store) -----------------
+
+    def export_observation(self, sample_cap: int = 2048) -> dict:
+        """Strategic observation for the fleet policy store: a recent sample
+        of the local length distribution (weighted upstream by the replica's
+        true arrival count), the local Bayesian posterior, and the currently
+        installed partition edges.  Read-only and cheap — safe to call from
+        a periodic sync loop."""
+        lengths = self.monitor.historical_lengths()
+        if len(lengths) > sample_cap:
+            lengths = lengths[-sample_cap:]
+        return {
+            "lengths": lengths,
+            "n_arrivals": self.monitor.total_arrivals,
+            "trials": self.meta_opt.export_trials(),
+            "edges": [q.bounds.hi for q in self.manager.queues[:-1]],
+            "max_queues": self.cfg.max_queues,
+        }
+
+    def adopt_global_policy(self, boundaries, meta: MetaParams, trials=(),
+                            local_weight: float = 0.0, now: float = 0.0,
+                            epoch: int = 0) -> None:
+        """Install a fleet-level policy with per-replica adaptation.
+
+        ``local_weight`` w ∈ [0,1] sets how much locally learned structure
+        survives: interior boundary edges become (1−w)·global + w·nearest
+        local edge, and the scoring meta-vector blends the same way.  w=0 is
+        a pure global install (warm start); w=1 keeps local structure and
+        only absorbs the shared posterior.  Global trials are merged into
+        the local Bayesian optimizer either way, so a replica's next trial
+        starts from the pooled fleet posterior instead of random warmup."""
+        w = min(max(float(local_weight), 0.0), 1.0)
+        g_bounds = [QueueBounds(b.lo, b.hi) for b in boundaries]
+        local_edges = [q.bounds.hi for q in self.manager.queues[:-1]
+                       if q.bounds.hi != float("inf")]
+        if w > 0.0 and local_edges and len(self.manager.queues) > 1:
+            bounds = self._blend_boundaries(g_bounds, local_edges, w)
+        else:
+            bounds = g_bounds
+        # Scoring dims blend; the *structural* knobs (queue budget, length
+        # normalizer) stay per-replica — the global meta's as_vector() does
+        # not carry them, so taking meta.max_queues/b_norm here would
+        # silently overwrite the operator's local EWSJFConfig with the
+        # store's defaults.  The blend target is the *installed* meta, not
+        # _current_meta(): mid-trial that would be the optimizer's random
+        # exploration candidate, and w would re-inject exploration noise
+        # into the serving policy on every adoption.
+        local_meta = self.manager.meta
+        gv = np.asarray(meta.as_vector())
+        if w > 0.0:
+            lv = np.asarray(local_meta.as_vector())
+            gv = (1.0 - w) * gv + w * lv
+        blended = MetaParams.from_vector(gv,
+                                         max_queues=self.cfg.max_queues,
+                                         b_norm=local_meta.b_norm)
+        if trials:
+            self.meta_opt.merge_trials(trials)
+        self.manager.apply_policy(bounds, blended)
+        # The adopted policy supersedes any in-flight local trial's Θ; the
+        # trial keeps running but must score the structure actually serving.
+        if self._trial_meta is not None:
+            self._trial_meta = blended
+        self._mark_snapshot_dirty()
+        # Deliberately NOT resetting _last_reopt: the local strategic loop
+        # keeps its own cadence (with sync_interval < reopt_interval a reset
+        # here would postpone local repartitioning forever).  The store
+        # re-broadcasts after a local repartition via reopt_count below.
+        self.adopted_epoch = epoch
+        self._reopt_at_adopt = self.reopt_count
+
+    @staticmethod
+    def _blend_boundaries(g_bounds: list[QueueBounds],
+                          local_edges: list[float],
+                          w: float) -> list[QueueBounds]:
+        """Keep the *global* queue count; pull each global interior edge
+        toward the nearest locally learned edge by ``w``.  Edges that would
+        collapse an interval (non-monotonic after blending) are dropped."""
+        g_edges = [b.hi for b in g_bounds[:-1] if b.hi != float("inf")]
+        le = np.asarray(local_edges, dtype=np.float64)
+        blended: list[float] = []
+        for g in g_edges:
+            nearest = float(le[np.argmin(np.abs(le - g))])
+            e = (1.0 - w) * g + w * nearest
+            if not blended or e > blended[-1]:
+                blended.append(e)
+        edges = [0.0] + blended + [float("inf")]
+        return [QueueBounds(edges[i], edges[i + 1])
+                for i in range(len(edges) - 1)]
+
+    def warm_start_from(self, boundaries, meta: MetaParams, trials=(),
+                        now: float = 0.0, epoch: int = 0) -> None:
+        """Cold-start path for freshly scaled-up replicas: install the
+        current global policy verbatim (no local structure exists to blend)
+        and seed the Bayesian posterior, so the first request already sees
+        the fleet's learned queue structure instead of a single [0, ∞)
+        queue."""
+        self.adopt_global_policy(boundaries, meta, trials=trials,
+                                 local_weight=0.0, now=now, epoch=epoch)
 
     def _advance_trial(self, now: float) -> None:
         if self._trial_meta is None:

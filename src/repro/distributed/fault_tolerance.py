@@ -45,10 +45,21 @@ class ClusterController:
     topology: one strategic scheduler, executor-only pods)."""
 
     def __init__(self, scheduler: BaseScheduler, cost: CostModel,
-                 ccfg: ClusterConfig | None = None):
+                 ccfg: ClusterConfig | None = None,
+                 policy_store=None, cell_id: int | None = None):
         self.sched = scheduler
         self.cost = cost
         self.cfg = ccfg or ClusterConfig()
+        # Optional fleet PolicyStore shared across *cells* (each controller
+        # is one cell with one global strategic scheduler): the controller
+        # publishes its scheduler's observations and adopts the merged
+        # policy during ``advance`` — same epochs/staleness semantics as
+        # ``cluster.ClusterSimulator``.  cell_id defaults to a store-issued
+        # unique key so co-located cells never collide.
+        self.policy_store = policy_store
+        if cell_id is None and policy_store is not None:
+            cell_id = policy_store.issue_party_key()
+        self.cell_id = cell_id
         self.now = 0.0
         self.finished: list = []
         self.reenqueued = 0
@@ -139,10 +150,19 @@ class ClusterController:
             pod.busy_until = max(pod.busy_until, self.now)
         return len(plan.requests)
 
+    def sync_policy(self) -> None:
+        """One strategic-plane round against the shared store
+        (``PolicyStore.sync``: per-cell publish cadence, store-wide merge
+        cadence, ungated adoption — cells never starve each other).  No-op
+        without a store or a strategic scheduler."""
+        if self.policy_store is not None:
+            self.policy_store.sync(self.sched, self.cell_id, self.now)
+
     def advance(self, dt: float) -> None:
         """Advance simulated time; each pod's engine steps until it catches
         up with the new clock."""
         self.now += dt
+        self.sync_policy()
         for pod in self.pods.values():
             if not pod.alive:
                 continue

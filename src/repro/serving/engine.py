@@ -72,7 +72,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, scheduler: BaseScheduler,
                  ecfg: EngineConfig | None = None,
                  policy: DtypePolicy | None = None,
-                 admission=None):
+                 admission=None, policy_store=None,
+                 replica_key: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -93,6 +94,15 @@ class ServingEngine:
         # Replica-facing admission hook (cluster.AdmissionController or any
         # object with .admit(req, now, est_delay) -> decision.admitted).
         self.admission = admission
+        # Fleet strategic plane (cluster.PolicyStore): engines sharing one
+        # store publish their scheduler's strategic observations and adopt
+        # the merged global policy — same publish→merge→broadcast loop as
+        # the cluster simulator, keyed by ``replica_key`` (store-issued
+        # unique key when not given, so co-located engines never collide).
+        self.policy_store = policy_store
+        if replica_key is None and policy_store is not None:
+            replica_key = policy_store.issue_party_key()
+        self.replica_key = replica_key
         self.shed: list[Request] = []
         self.readmitted = 0
         self._prefill_tok_rate = 0.0     # EWMA tokens/s, for delay estimates
@@ -201,11 +211,21 @@ class ServingEngine:
             self._pump_retries(now)
             if hasattr(self.sched, "maybe_reoptimize"):
                 self.sched.maybe_reoptimize(now)
+            self._maybe_sync_policy(now)
             self._admit(now)
             if not self.slot_state and self.sched.waiting() == 0 and pi < n_total:
                 continue
             self._decode_tick()
         return self.finished
+
+    def _maybe_sync_policy(self, now: float) -> None:
+        """Strategic-plane round against a shared ``cluster.PolicyStore``
+        (``store.sync``): publish on this engine's own per-party cadence,
+        merge on the store-wide cadence, adopt whenever a newer epoch
+        exists — engines sharing one store each keep their own clock, so
+        none is starved by another's merges.  Never blocks serving."""
+        if self.policy_store is not None:
+            self.policy_store.sync(self.sched, self.replica_key, now)
 
     # ---- admission + prefill ----------------------------------------------
 

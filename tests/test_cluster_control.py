@@ -126,6 +126,58 @@ class TestRouterCache:
         assert s.version > v1
         assert s.snapshot_cached(0.6).waiting == 0
 
+    def test_snapshot_cached_equals_rebuild_randomized(self):
+        """Property: after *any* interleaving of enqueue / dispatch /
+        finish / bubble-carve / repartition events, ``snapshot_cached``
+        reports exactly what a full ``snapshot`` rebuild reports (deltas
+        never drift from ground truth)."""
+        import numpy as np
+        import pytest as _pytest
+        from repro.core.batch_builder import BatchBudget
+
+        def check(s, now):
+            cached = s.snapshot_cached(now)
+            fresh = s.snapshot(now)
+            assert cached.waiting == fresh.waiting
+            assert cached.waiting_tokens == fresh.waiting_tokens
+            assert len(cached.queues) == len(fresh.queues)
+            for qc, qf in zip(cached.queues, fresh.queues):
+                assert (qc.queue_id, qc.index, qc.lo, qc.hi, qc.depth,
+                        qc.tokens) == (qf.queue_id, qf.index, qf.lo, qf.hi,
+                                       qf.depth, qf.tokens)
+                assert qc.mean_len == _pytest.approx(qf.mean_len)
+                assert qc.head_len == qf.head_len
+                assert qc.head_wait == _pytest.approx(qf.head_wait)
+                assert qc.head_score == _pytest.approx(qf.head_score,
+                                                       rel=1e-9, abs=1e-12)
+
+        for seed in range(4):
+            rng = np.random.default_rng(seed)
+            s = EWSJFScheduler(EWSJFConfig(min_history=24,
+                                           reopt_interval=2.0,
+                                           trial_interval=4.0,
+                                           empty_threshold=3))
+            now = 0.0
+            dispatched: list[Request] = []
+            for _ in range(250):
+                now += float(rng.exponential(0.05))
+                op = float(rng.random())
+                if op < 0.5:
+                    band = int(rng.integers(0, 3))
+                    lo, hi = [(8, 256), (256, 2000), (2000, 8000)][band]
+                    s.submit(Request(prompt_len=int(rng.integers(lo, hi)),
+                                     arrival_time=now), now=now)
+                elif op < 0.75:
+                    plan = s.tick(now, BatchBudget(
+                        max_requests=int(rng.integers(1, 5)),
+                        max_tokens=int(rng.integers(512, 8192))))
+                    dispatched.extend(plan.requests)
+                elif op < 0.9:
+                    s.maybe_reoptimize(now, force=bool(rng.random() < 0.3))
+                elif dispatched:
+                    s.on_finish(dispatched.pop(0), now)
+                check(s, now)
+
     def test_fcfs_incremental_token_sum(self):
         s = FCFSScheduler()
         for plen in (100, 200, 300):
