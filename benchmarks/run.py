@@ -3,12 +3,16 @@
     PYTHONPATH=src:. python -m benchmarks.run            # CSV to stdout
     BENCH_SCALE=1.0 ... python -m benchmarks.run         # paper-scale sweeps
     python -m benchmarks.run --quick                     # CI crash canary
+    python -m benchmarks.run --quick --json BENCH_summary.json
 
 ``--quick`` forces a tiny ``BENCH_SCALE`` (unless one is already set) and
 runs every section end-to-end in a few minutes — its job is to catch
 crashes on every PR, not to produce meaningful absolute numbers.  The
-machine-readable cluster artifact (``BENCH_cluster.json``) is produced by
-``python -m benchmarks.bench_cluster_routing --quick --json ...``.
+scenario-level machine-readable artifacts (``BENCH_cluster.json``,
+``BENCH_prefix.json``) are produced by the individual benches'
+``--quick --json`` CLIs; ``--json`` here additionally writes a *top-level
+summary* (every section's returned report + wall time + failures) so the
+perf trajectory is tracked across PRs from one artifact.
 
 CSV convention: ``name,us_per_call,derived`` (derived = |-separated
 key=value results; paper-claim checks inline)."""
@@ -16,6 +20,7 @@ key=value results; paper-claim checks inline)."""
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -26,42 +31,71 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny scale, every section; CI crash canary")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a top-level summary JSON (section reports "
+                         "+ wall time + failures), e.g. BENCH_summary.json")
     args = ap.parse_args(argv)
     if args.quick:
         os.environ.setdefault("BENCH_SCALE", "0.01")
 
     from . import (bench_cluster_routing, bench_kernels, bench_meta_optimizer,
-                   bench_padding, bench_policy_store,
+                   bench_padding, bench_policy_store, bench_prefix_cache,
                    bench_scheduler_overhead, bench_table3_queue_count,
                    bench_table10_summary, bench_tables4to7_load,
                    bench_tables8to9_regimes, bench_ttft_starvation)
     sections = [
-        ("Table 3 (queue count)", bench_table3_queue_count.main),
-        ("Tables 4-7 / Fig 3 (load sweep)", bench_tables4to7_load.main),
-        ("Tables 8-9 / Fig 4 (regimes x queues)", bench_tables8to9_regimes.main),
-        ("Table 10 (summary)", bench_table10_summary.main),
-        ("TTFT + starvation (SS1, App C)", bench_ttft_starvation.main),
-        ("Meta-optimizer (App B / Fig 5)", bench_meta_optimizer.main),
-        ("Scheduler overhead (SS5/Table 11)", bench_scheduler_overhead.main),
-        ("TPU padding waste (beyond-paper)", bench_padding.main),
-        ("Cluster routing + control plane (beyond-paper)",
+        ("table3_queue_count", "Table 3 (queue count)",
+         bench_table3_queue_count.main),
+        ("tables4to7_load", "Tables 4-7 / Fig 3 (load sweep)",
+         bench_tables4to7_load.main),
+        ("tables8to9_regimes", "Tables 8-9 / Fig 4 (regimes x queues)",
+         bench_tables8to9_regimes.main),
+        ("table10_summary", "Table 10 (summary)", bench_table10_summary.main),
+        ("ttft_starvation", "TTFT + starvation (SS1, App C)",
+         bench_ttft_starvation.main),
+        ("meta_optimizer", "Meta-optimizer (App B / Fig 5)",
+         bench_meta_optimizer.main),
+        ("scheduler_overhead", "Scheduler overhead (SS5/Table 11)",
+         bench_scheduler_overhead.main),
+        ("padding", "TPU padding waste (beyond-paper)", bench_padding.main),
+        ("cluster_routing", "Cluster routing + control plane (beyond-paper)",
          lambda: bench_cluster_routing.main(quick=args.quick)),
-        ("Fleet policy store (beyond-paper)",
+        ("policy_store", "Fleet policy store (beyond-paper)",
          lambda: bench_policy_store.main(quick=args.quick)),
-        ("Pallas kernels", bench_kernels.main),
+        ("prefix_cache", "Prefix-reuse KV plane (beyond-paper)",
+         lambda: bench_prefix_cache.main(quick=args.quick)),
+        ("kernels", "Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()
-    failures = 0
+    failures: list[str] = []
+    reports: dict = {}
     print("name,us_per_call,derived")
-    for title, fn in sections:
+    for key, title, fn in sections:
         print(f"# --- {title} ---")
+        t_sec = time.time()
         try:
-            fn()
+            out = fn()
+            if isinstance(out, dict):
+                reports[key] = out
         except Exception:
-            failures += 1
+            failures.append(key)
             print(f"# FAILED: {title}", file=sys.stderr)
             traceback.print_exc()
-    print(f"# total wall: {time.time()-t0:.1f}s; failures: {failures}")
+        finally:
+            reports.setdefault(key, {})
+            if isinstance(reports[key], dict):
+                reports[key]["wall_s"] = round(time.time() - t_sec, 3)
+    wall = time.time() - t0
+    print(f"# total wall: {wall:.1f}s; failures: {len(failures)}")
+    if args.json:
+        summary = {"quick": args.quick,
+                   "bench_scale": os.environ.get("BENCH_SCALE"),
+                   "total_wall_s": round(wall, 1),
+                   "failures": failures,
+                   "sections": reports}
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
     if failures:
         sys.exit(1)
 

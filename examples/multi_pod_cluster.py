@@ -6,15 +6,18 @@ autoscaler absorbing a traffic burst with re-admission of shed work.
     PYTHONPATH=src python examples/multi_pod_cluster.py
 """
 
+import copy
 import sys
 
 sys.path.insert(0, "src")
 
 from repro.cluster import (AdmissionConfig, AdmissionController,
                            AutoscalerConfig, ClusterSimulator, PolicyStore,
-                           PolicyStoreConfig, ScenarioEvent,
-                           SLOBurnAutoscaler, make_fleet, make_router)
+                           PolicyStoreConfig, PrefixDirectory, ReplicaParams,
+                           ScenarioEvent, SLOBurnAutoscaler, make_fleet,
+                           make_router)
 from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, WorkloadSpec
+from repro.kvplane import SharedPrefixWorkloadSpec, agentic_mix
 
 
 def scheduler_factory():
@@ -116,6 +119,33 @@ def main() -> None:
           f"warm-started policy (no single-queue relearning); by end of "
           f"run it tracks fleet epoch {new.sched.adopted_epoch} "
           f"({len(new.sched.manager.queues)} queues)")
+
+    print("\n== scenario 5: prefix-reuse KV plane (multi-turn/agentic "
+          "traffic, radix caches + fleet prefix directory)")
+    spec = SharedPrefixWorkloadSpec(n_sessions=20, turns_per_session=6,
+                                    session_rate=3.0, think_time=1.0,
+                                    system_prompt_len=128,
+                                    user_turn_range=(64, 192),
+                                    mean_output_tokens=96, seed=5)
+    bg = WorkloadSpec(n_requests=60, arrival_rate=6.0, seed=6).generate()
+    wl = agentic_mix(spec, bg)
+    for label, cache, directory in (("prefix-blind EWSJF", False, None),
+                                    ("prefix-aware KV plane", True,
+                                     PrefixDirectory())):
+        fleet = make_fleet(4, cost, scheduler_factory=scheduler_factory,
+                           params=ReplicaParams(enable_prefix_cache=cache))
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                               prefix_directory=directory)
+        res = sim.run(copy.deepcopy(wl))
+        st = res.ttft_stats()
+        extra = ""
+        if cache:
+            d = res.prefix["directory"]
+            extra = (f" | saved {res.prefix['saved_tokens']} prefill tokens"
+                     f" | directory epoch {d['epoch']}, {d['entries']} hot "
+                     f"prefixes")
+        print(f"   {label:24s} short TTFT {st['short']['mean'] * 1e3:7.1f} ms"
+              f" | {res.tok_per_s:6.1f} tok/s{extra}")
 
 
 if __name__ == "__main__":

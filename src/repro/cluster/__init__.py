@@ -12,6 +12,8 @@ from typing import Callable, Optional
 
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
+from ..kvplane import (LinkTopology, LinkTopologyConfig, PrefixDirectory,
+                       PrefixDirectoryConfig, PrefixFetch)
 from .admission import (DEFAULT_SLO_CLASSES, AdmissionConfig,
                         AdmissionController, AdmissionDecision, SLOClass,
                         classify_by_length)
@@ -52,6 +54,8 @@ __all__ = [
     "HandoffChannel", "KVHandoff",
     "HealthConfig", "HealthMonitor",
     "GlobalPolicy", "PolicyStore", "PolicyStoreConfig", "ReplicaObservation",
+    "LinkTopology", "LinkTopologyConfig", "PrefixDirectory",
+    "PrefixDirectoryConfig", "PrefixFetch",
     "ReplicaModel", "ReplicaParams",
     "Router", "RoundRobinRouter", "LeastLoadedRouter", "EWSJFRouter",
     "make_router",

@@ -91,6 +91,14 @@ class AdmissionConfig:
     # only seeds the buckets until the first measurement lands.
     adaptive_refill: bool = False
     refill_headroom: float = 1.0     # measured rate × headroom = budget rate
+    # --- per-replica budget shares (ROADMAP gap) ---
+    # Split every class's refill across replicas proportional to their
+    # measured ``tokens_out`` EWMAs (``set_replica_rates``, fed by the
+    # HealthMonitor): a class's traffic can then not pile onto one replica
+    # past that replica's demonstrated capacity even while the fleet-total
+    # budget still has headroom.  Enforced only when the caller passes the
+    # routed replica to ``admit`` (the cluster simulator does).
+    per_replica_shares: bool = False
 
 
 @dataclass
@@ -149,6 +157,51 @@ class AdmissionController:
         self._buckets = {n: self._rates[n] * self.cfg.budget_window
                          for n in names}
         self._bucket_t = 0.0
+        # per-replica shares: replica_id -> fraction of the fleet refill,
+        # and (class, replica) sub-buckets carved from each class's rate
+        self._rep_share: dict[int, float] = {}
+        self._rep_rates: dict[tuple[str, int], float] = {}
+        self._rep_buckets: dict[tuple[str, int], float] = {}
+        self.replica_denied: dict[int, int] = {}
+
+    def wants_replica_hint(self) -> bool:
+        """Whether ``admit`` benefits from knowing the routed replica."""
+        return self.cfg.per_replica_shares
+
+    def set_replica_rates(self, rates: dict[int, float]) -> None:
+        """Per-replica budget shares: split every class's refill across
+        replicas proportional to their measured token-output EWMAs (the
+        HealthMonitor's ``replica_rate``).  Replicas that disappeared drop
+        their sub-buckets; new ones start at their share's burst cap."""
+        if not self.cfg.per_replica_shares:
+            return
+        positive = [r for r in rates.values() if r > 0]
+        if not positive:
+            return
+        # A replica with no measured output yet (fresh scale-up — added
+        # precisely because of a burst) gets the mean measured rate as its
+        # provisional share: a zero share would starve the new capacity of
+        # exactly the traffic it was added for.
+        floor = sum(positive) / len(positive)
+        shares = {rid: (r if r > 0 else floor) for rid, r in rates.items()}
+        total = sum(shares.values())
+        self._rep_share = {rid: r / total for rid, r in shares.items()}
+        live_keys = set()
+        for name, class_rate in self._rates.items():
+            for rid, share in self._rep_share.items():
+                key = (name, rid)
+                live_keys.add(key)
+                rate = class_rate * share
+                self._rep_rates[key] = rate
+                cap = rate * self.cfg.budget_window
+                if key in self._rep_buckets:
+                    self._rep_buckets[key] = min(self._rep_buckets[key], cap)
+                else:
+                    self._rep_buckets[key] = cap
+        for key in list(self._rep_rates):
+            if key not in live_keys:
+                self._rep_rates.pop(key, None)
+                self._rep_buckets.pop(key, None)
 
     def set_measured_rate(self, tokens_per_s: float) -> None:
         """Adaptive refill: retarget the per-class bucket rates at the
@@ -164,6 +217,9 @@ class AdmissionController:
             self._rates[name] = self._budget_rate * w / self._total_w
             cap = self._rates[name] * self.cfg.budget_window
             self._buckets[name] = min(self._buckets[name], cap)
+        if self._rep_share:
+            # keep the per-replica split in step with the retargeted rates
+            self.set_replica_rates(self._rep_share)
 
     def slo_of(self, req: Request) -> SLOClass:
         return self.classes[self._classify(req)]
@@ -172,7 +228,9 @@ class AdmissionController:
 
     @staticmethod
     def _token_cost(req: Request) -> float:
-        return float(req.prompt_len + req.max_new_tokens)
+        # Effective length (KV plane): a cached prefix costs no prefill
+        # budget.  Identical to prompt_len when cached_len is 0.
+        return float(req.effective_len + req.max_new_tokens)
 
     def _refill(self, now: float) -> None:
         dt = now - self._bucket_t
@@ -182,6 +240,10 @@ class AdmissionController:
         for name, rate in self._rates.items():
             cap = rate * self.cfg.budget_window
             self._buckets[name] = min(cap, self._buckets[name] + rate * dt)
+        for key, rate in self._rep_rates.items():
+            cap = rate * self.cfg.budget_window
+            self._rep_buckets[key] = min(cap,
+                                         self._rep_buckets[key] + rate * dt)
 
     def budget_remaining(self, class_name: str) -> float:
         return self._buckets.get(class_name, 0.0)
@@ -189,20 +251,34 @@ class AdmissionController:
     # ---- arrival / retry path --------------------------------------------
 
     def admit(self, req: Request, now: float, est_delay: float,
-              retry: bool = False) -> AdmissionDecision:
+              retry: bool = False,
+              replica_id: Optional[int] = None) -> AdmissionDecision:
         """Arrival-time (or retry-time) decision given the cluster's
-        best-case queue delay estimate (the router's min route cost)."""
+        best-case queue delay estimate (the router's min route cost).
+        ``replica_id`` is the router's tentative placement — with
+        ``per_replica_shares`` it is additionally held to that replica's
+        slice of the class budget."""
         slo = self.slo_of(req)
         budgets_on = self._budget_rate > 0
         if budgets_on:
             self._refill(now)
         # 1) Weighted fair share under saturation: a class that exhausted
-        #    its token bucket is refused even if its own TTFT still fits.
+        #    its token bucket — or its share of the *routed replica's*
+        #    bucket — is refused even if its own TTFT still fits.
         if (budgets_on and slo.sheddable
-                and est_delay > self.cfg.saturation_delay
-                and self._buckets[slo.name] < self._token_cost(req)):
-            self.budget_denied[slo.name] += 1
-            return self._reject(req, slo, now, est_delay, "budget")
+                and est_delay > self.cfg.saturation_delay):
+            cost = self._token_cost(req)
+            rep_key = ((slo.name, replica_id) if replica_id is not None
+                       else None)
+            if self._buckets[slo.name] < cost:
+                self.budget_denied[slo.name] += 1
+                return self._reject(req, slo, now, est_delay, "budget")
+            if (rep_key is not None and rep_key in self._rep_buckets
+                    and self._rep_buckets[rep_key] < cost):
+                self.budget_denied[slo.name] += 1
+                self.replica_denied[replica_id] = \
+                    self.replica_denied.get(replica_id, 0) + 1
+                return self._reject(req, slo, now, est_delay, "budget")
         # 2) SLO feasibility shed.
         if slo.sheddable and est_delay > self.cfg.shed_factor * slo.ttft_target:
             return self._reject(req, slo, now, est_delay, "shed")
@@ -210,6 +286,11 @@ class AdmissionController:
         if budgets_on and slo.sheddable:
             cost = self._token_cost(req)
             self._buckets[slo.name] = max(0.0, self._buckets[slo.name] - cost)
+            rep_key = ((slo.name, replica_id) if replica_id is not None
+                       else None)
+            if rep_key is not None and rep_key in self._rep_buckets:
+                self._rep_buckets[rep_key] = max(
+                    0.0, self._rep_buckets[rep_key] - cost)
         self.admitted[slo.name] += 1
         if retry and req.request_id in self._deferred_ids:
             self.readmitted[slo.name] += 1
@@ -288,4 +369,6 @@ class AdmissionController:
                 "readmitted": dict(self.readmitted),
                 "budget_denied": dict(self.budget_denied),
                 "budget_rate": self._budget_rate,
+                "replica_shares": dict(self._rep_share),
+                "replica_denied": dict(self.replica_denied),
                 "retry_pending": len(self._retry_q)}

@@ -24,6 +24,7 @@ class HealthConfig:
     straggler_factor: float = 3.0
     check_interval: float = 1.0
     throughput_alpha: float = 0.3    # fleet token-rate EWMA smoothing
+    kv_alpha: float = 0.3            # KV-occupancy EWMA smoothing
 
 
 class HealthMonitor:
@@ -33,10 +34,20 @@ class HealthMonitor:
         self.stragglers: list[int] = []
         self._last_check = 0.0
         # Measured fleet throughput (tokens/s EWMA over check intervals):
-        # feeds the admission layer's adaptive token-bucket refill.
+        # feeds the admission layer's adaptive token-bucket refill.  The
+        # per-replica EWMAs additionally drive the admission layer's
+        # *per-replica budget shares* (each replica's slice of the fleet
+        # refill is proportional to its measured output rate).
         self.tok_rate_ewma = 0.0
+        self.replica_rate: dict[int, float] = {}
         self._tok_seen = 0
+        self._rep_seen: dict[int, int] = {}
         self._tok_t: float | None = None
+        # Smoothed per-replica KV occupancy (+ high-water mark): surfaced
+        # to the router via ``ReplicaModel.kv_ewma`` so prefix-aware
+        # routing avoids fetching prefixes into nearly-exhausted pools.
+        self.kv_ewma: dict[int, float] = {}
+        self.kv_peak: dict[int, float] = {}
 
     def due(self, now: float) -> bool:
         return now - self._last_check >= self.cfg.check_interval
@@ -44,11 +55,13 @@ class HealthMonitor:
     def observe_throughput(self, replicas: Iterable[ReplicaModel],
                            now: float) -> float:
         """Fold the fleet's cumulative generated-token counters into the
-        token-rate EWMA.  Call once per check round (the cluster simulator
-        does); returns the current EWMA."""
+        token-rate EWMA (fleet total + per replica).  Call once per check
+        round (the cluster simulator does); returns the fleet EWMA."""
+        replicas = list(replicas)
         total = sum(r.tokens_out for r in replicas)
         if self._tok_t is None:
             self._tok_seen, self._tok_t = total, now
+            self._rep_seen = {r.replica_id: r.tokens_out for r in replicas}
             return self.tok_rate_ewma
         dt = now - self._tok_t
         if dt <= 0:
@@ -57,8 +70,49 @@ class HealthMonitor:
         a = self.cfg.throughput_alpha
         self.tok_rate_ewma = (rate if self.tok_rate_ewma <= 0
                               else (1 - a) * self.tok_rate_ewma + a * rate)
+        live = set()
+        for r in replicas:
+            if not r.alive:
+                continue            # dead replicas must not keep a rate (or
+                                    # a budget share) — drop below
+            live.add(r.replica_id)
+            rr = (r.tokens_out - self._rep_seen.get(r.replica_id, 0)) / dt
+            prev = self.replica_rate.get(r.replica_id, 0.0)
+            self.replica_rate[r.replica_id] = (rr if prev <= 0
+                                               else (1 - a) * prev + a * rr)
+            self._rep_seen[r.replica_id] = r.tokens_out
+        for rid in list(self.replica_rate):
+            if rid not in live:
+                self.replica_rate.pop(rid, None)
+                self._rep_seen.pop(rid, None)
         self._tok_seen, self._tok_t = total, now
         return self.tok_rate_ewma
+
+    def observe_kv(self, replicas: Iterable[ReplicaModel]) -> dict:
+        """Fold each replica's instantaneous KV-pool occupancy into a
+        smoothed per-replica EWMA (written back onto the replica as
+        ``kv_ewma`` for the router's snapshot-time reads) and track the
+        high-water mark.  Returns the EWMA map."""
+        a = self.cfg.kv_alpha
+        live = set()
+        for r in replicas:
+            if not r.alive:
+                continue
+            live.add(r.replica_id)
+            occ = r.kv_occupancy()
+            prev = self.kv_ewma.get(r.replica_id)
+            cur = occ if prev is None else (1 - a) * prev + a * occ
+            self.kv_ewma[r.replica_id] = cur
+            r.kv_ewma = cur
+            self.kv_peak[r.replica_id] = max(
+                self.kv_peak.get(r.replica_id, 0.0), occ)
+        for rid in list(self.kv_ewma):
+            if rid not in live:
+                self.kv_ewma.pop(rid, None)
+        return self.kv_ewma
+
+    def kv_stats(self) -> dict:
+        return {"ewma": dict(self.kv_ewma), "peak": dict(self.kv_peak)}
 
     def check(self, replicas: Iterable[ReplicaModel], now: float
               ) -> tuple[list[ReplicaModel], list[ReplicaModel]]:

@@ -8,6 +8,19 @@ same step-cost machinery as ``core/simulator.py`` (chunked prefill charge,
 multi-step decode charge, LIFO recompute preemption), so a cluster of
 replicas is benchmarkable on CPU in "simulator units".
 
+Paged-KV accounting runs on the serving layer's
+:class:`~repro.serving.kv_cache.BlockPool` (one pool per replica).  With
+``ReplicaParams.enable_prefix_cache`` the replica additionally owns a
+:class:`~repro.kvplane.radix.RadixPrefixIndex` as a *second tenant of the
+same pool*: dispatched requests match their ``prompt_hashes`` against it,
+prefill is charged only for the uncached suffix
+(``CostModel.prefill_cost``), matched paths are pinned for the request's
+lifetime, and freshly computed blocks are inserted back.  Remote prefix
+fetches planned by a prefix-aware router (``Request.prefix_fetch``) are
+charged against the shared :class:`~repro.kvplane.topology.LinkTopology`
+with compute overlap.  With the cache disabled every code path degrades to
+the pre-KV-plane integer arithmetic bit-for-bit.
+
 Roles (disaggregated prefill/decode, DistServe-style):
 
   * ``unified``  — prefill + decode on the same replica (default);
@@ -29,6 +42,8 @@ from ..core.batch_builder import BatchBudget
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
 from ..core.types import Request, RequestState, SchedulerSnapshot
+from ..kvplane.radix import RadixPrefixIndex
+from ..serving.kv_cache import BlockPool
 from .disagg import KVHandoff
 
 
@@ -41,6 +56,10 @@ class ReplicaParams:
     decode_steps_per_tick: int = 8
     bucket_pad: bool = False
     scheduler_overhead: float = 50e-6
+    # ---- KV plane (prefix reuse) ----
+    enable_prefix_cache: bool = False
+    prefix_cache_blocks: Optional[int] = None   # cap; None = share the pool
+    prefix_advertise_k: int = 64        # hot prefixes published per sync
 
     @property
     def total_blocks(self) -> int:
@@ -52,6 +71,7 @@ class _Running:
     req: Request
     kv_tokens: int
     remaining: int
+    pin_node: object = None             # radix node pinned for this request
 
 
 class ReplicaModel:
@@ -75,7 +95,16 @@ class ReplicaModel:
 
         # executor state
         self.running: list[_Running] = []
-        self.free_blocks = self.p.total_blocks
+        self.pool = BlockPool(self.p.total_blocks, self.p.block_size)
+        self.radix: Optional[RadixPrefixIndex] = (
+            RadixPrefixIndex(self.pool, self.p.block_size,
+                             capacity_blocks=self.p.prefix_cache_blocks)
+            if self.p.enable_prefix_cache else None)
+        self.topology = None                 # shared LinkTopology (simulator)
+        self.peer_alive_fn: Optional[Callable[[int], bool]] = None
+        # ^ liveness oracle for remote-prefix fetches (simulator-wired): a
+        #   fetch plan stamped before the source replica failed must not
+        #   materialize KV that died with the machine.
         self.busy_until = 0.0
         self.inbox: list[KVHandoff] = []     # decode: pending KV handoffs
         self.outbox: list[KVHandoff] = []    # prefill: completed prefills
@@ -95,6 +124,8 @@ class ReplicaModel:
         self.busy_time = 0.0
         self.tokens_out = 0          # cumulative generated tokens (throughput
                                      # telemetry for the health monitor EWMA)
+        self.prefix_saved_tokens = 0          # prefill tokens skipped via cache
+        self.kv_ewma = 0.0           # smoothed occupancy (health monitor)
         # Queue-delay observations (arrival→prefill-dispatch wait) consumed
         # by the control plane (health monitor → SLO-burn autoscaler).
         # Bounded: stale samples age out if nobody drains them.
@@ -106,6 +137,10 @@ class ReplicaModel:
     def pod_id(self) -> int:                 # legacy name (distributed API)
         return self.replica_id
 
+    @property
+    def free_blocks(self) -> int:
+        return self.pool.free_blocks
+
     def schedulable(self) -> bool:
         return self.alive and not self.draining
 
@@ -116,10 +151,23 @@ class ReplicaModel:
         return self.schedulable() and self.role in ("unified", "decode")
 
     def kv_occupancy(self) -> float:
-        return 1.0 - self.free_blocks / max(self.p.total_blocks, 1)
+        return self.pool.utilization
 
     def inflight(self) -> int:
         return len(self.running)
+
+    def prefix_probe(self, hashes) -> int:
+        """Read-only longest-prefix match in *blocks* (router costing; no
+        LRU touch, no counters).  0 without a cache or hashes."""
+        if self.radix is None or not hashes:
+            return 0
+        return self.radix.match(hashes, touch=False).blocks
+
+    def prefix_adverts(self) -> dict:
+        """Hot cached prefixes for the fleet directory ({hash: depth})."""
+        if self.radix is None:
+            return {}
+        return self.radix.hot_adverts(self.p.prefix_advertise_k)
 
     def scheduler_snapshot(self, now: float,
                            fresh: bool = False) -> SchedulerSnapshot:
@@ -165,7 +213,8 @@ class ReplicaModel:
 
     def fail(self) -> list[Request]:
         """Hard failure: everything in flight or queued is lost locally and
-        returned for global re-enqueue (recompute recovery, no KV rescue)."""
+        returned for global re-enqueue (recompute recovery, no KV rescue).
+        The prefix cache dies with the machine."""
         self.alive = False
         orphans: list[Request] = []
         for rr in self.running:
@@ -177,12 +226,17 @@ class ReplicaModel:
         self.running = []
         self.inbox = []
         self.outbox = []
-        self.free_blocks = self.p.total_blocks
+        self.pool = BlockPool(self.p.total_blocks, self.p.block_size)
+        self.radix = (RadixPrefixIndex(self.pool, self.p.block_size,
+                                       capacity_blocks=self.p.prefix_cache_blocks)
+                      if self.p.enable_prefix_cache else None)
         for req in orphans:
             req.state = RequestState.PREEMPTED
             req.preemptions += 1
             req.generated = 0
             req.first_token_time = None
+            req.cached_len = 0           # its cached prefix is gone too
+            req.prefix_fetch = None
         return orphans
 
     def start_drain(self) -> list[Request]:
@@ -230,19 +284,69 @@ class ReplicaModel:
         for h in self.inbox:
             if (h.ready_time > now
                     or len(self.running) >= self.p.max_num_seqs
-                    or self._blocks_for(h.kv_tokens) > self.free_blocks):
+                    or not self.pool.can_allocate(h.kv_tokens)):
                 still.append(h)
                 continue
-            self.free_blocks -= self._blocks_for(h.kv_tokens)
             rem = max(h.req.max_new_tokens - h.req.generated, 0)
             if rem == 0:
-                self.free_blocks += self._blocks_for(h.kv_tokens)
                 self._finish(h.req, now)
             else:
+                self.pool.allocate(h.req.request_id, h.kv_tokens)
                 self.running.append(_Running(h.req, h.kv_tokens, rem))
         self.inbox = still
         return 0.0           # handoff admission is free; transfer was charged
                              # by the channel
+
+    # ---- KV plane: prefix attach at dispatch -----------------------------
+
+    def _prefix_attach(self, r: Request, now: float
+                       ) -> tuple[int, int, object, float]:
+        """Authoritative prefix resolution for one dispatched request:
+        match the local radix, execute any planned remote fetch (charged on
+        the shared topology with compute overlap), insert + pin the
+        request's full prefix path.  Returns ``(cached_tokens,
+        prefix_blocks_resident, pin_node, exposed_transfer_s)`` — cached
+        tokens are the prefill work actually *skipped* (local + fetched
+        blocks, never the blocks computed this pass)."""
+        if self.radix is None or not r.prompt_hashes:
+            r.prefix_fetch = None
+            return 0, 0, None, 0.0
+        hashes = r.prompt_hashes
+        m = self.radix.match(hashes, now)
+        reused = m.blocks
+        exposed = 0.0
+        fetch = r.prefix_fetch
+        r.prefix_fetch = None
+        if (fetch is not None and self.topology is not None
+                and fetch.blocks > m.blocks
+                and (self.peer_alive_fn is None
+                     or self.peer_alive_fn(fetch.src_replica))):
+            # Fetch only the missing tail of the advertised prefix; blocks
+            # that fail to land (pool pressure) were transferred in vain.
+            want = min(int(fetch.blocks), len(hashes))
+            missing = want - m.blocks
+            n_bytes = (missing * self.p.block_size
+                       * self.cost.model.kv_bytes_per_token)
+            exposed = self.topology.fetch(n_bytes, fetch.src_replica,
+                                          self.replica_id, now)
+            node, _ = self.radix.insert(hashes[:want], now)
+            reused = node.depth if node is not None else 0
+        # Cache the blocks computed this pass too (they are about to exist).
+        full_blocks = int(r.prompt_len) // self.p.block_size
+        pin_node, _ = self.radix.insert(hashes[:full_blocks], now)
+        self.radix.pin(pin_node)
+        resident = pin_node.depth if pin_node is not None else 0
+        cached_tokens = min(reused * self.p.block_size,
+                            int(r.prompt_len) - 1)
+        r.cached_len = cached_tokens
+        self.prefix_saved_tokens += cached_tokens
+        return cached_tokens, resident, pin_node, exposed
+
+    def _release(self, rr: _Running) -> None:
+        """Free a running request's private blocks and unpin its prefix."""
+        self.pool.free(rr.req.request_id)
+        if self.radix is not None and rr.pin_node is not None:
+            self.radix.unpin(rr.pin_node)
 
     def _prefill_tick(self, now: float) -> float:
         slots = self.p.max_num_seqs - len(self.running)
@@ -264,26 +368,38 @@ class ReplicaModel:
                 else:
                     live.append(r)
             plan.requests = live
-            plan.total_tokens = sum(int(r.prompt_len) for r in live)
+            plan.total_tokens = sum(int(r.effective_len) for r in live)
         if not plan.requests:
             return 0.0
         for r in plan.requests:
             self.dispatch_log.append((r, max(0.0, now - r.arrival_time)))
-        batch_tokens = plan.total_tokens
-        padded = max(plan.padded_tokens if self.p.bucket_pad else batch_tokens,
-                     batch_tokens)
-        mean_ctx = batch_tokens / len(plan.requests)
-        dt = self.cost.prefill_step_time(padded, mean_ctx) / max(self.speed,
-                                                                 1e-6)
+        # Authoritative prefix resolution (the router's cached_len was an
+        # estimate; the radix decides what is actually reusable now).
+        attach = [self._prefix_attach(r, now) for r in plan.requests]
+        suffix_tokens = sum(int(r.prompt_len) - a[0]
+                            for r, a in zip(plan.requests, attach))
+        exposed_fetch = sum(a[3] for a in attach)
+        padded = max(plan.padded_tokens if self.p.bucket_pad else suffix_tokens,
+                     suffix_tokens)
+        # Attention context is the *full* context (cached prefix included);
+        # only the dense/suffix charge shrinks with reuse.
+        mean_ctx = (sum(int(r.prompt_len) for r in plan.requests)
+                    / len(plan.requests))
+        dt = (self.cost.prefill_step_time(padded, mean_ctx) + exposed_fetch) \
+            / max(self.speed, 1e-6)
         end = now + dt
-        for r in plan.requests:
+        for r, (cached, resident, pin_node, _) in zip(plan.requests, attach):
             r.state = RequestState.RUNNING_DECODE
             r.first_token_time = end
             r.generated = 1
             kv = int(r.prompt_len) + 1
             rem = max(r.max_new_tokens - 1, 0)
             if self.role == "prefill":
-                # Disaggregation: the KV moves to a decode replica.
+                # Disaggregation: the KV moves to a decode replica.  The
+                # prefix path stays cached here but is not pinned past the
+                # handoff (the running sequence leaves this machine).
+                if self.radix is not None and pin_node is not None:
+                    self.radix.unpin(pin_node)
                 self.served += 1
                 if rem == 0:
                     self._finish(r, end)
@@ -292,10 +408,13 @@ class ReplicaModel:
                         req=r, kv_tokens=kv, src_replica=self.replica_id,
                         kv_bytes=kv * self.cost.model.kv_bytes_per_token))
             elif rem == 0:
+                if self.radix is not None and pin_node is not None:
+                    self.radix.unpin(pin_node)
                 self._finish(r, end)
             else:
-                self.free_blocks -= self._blocks_for(kv)
-                self.running.append(_Running(r, kv, rem))
+                private = kv - resident * self.p.block_size
+                self.pool.allocate_unchecked(r.request_id, private)
+                self.running.append(_Running(r, kv, rem, pin_node=pin_node))
         return dt
 
     def _decode_tick(self, now: float) -> float:
@@ -307,7 +426,7 @@ class ReplicaModel:
                        if (rr.kv_tokens % self.p.block_size) == 0)
             while need > self.free_blocks and len(self.running) > 1:
                 victim = self.running.pop()          # LIFO recompute
-                self.free_blocks += self._blocks_for(victim.kv_tokens)
+                self._release(victim)
                 victim.req.state = RequestState.PREEMPTED
                 victim.req.preemptions += 1
                 victim.req.generated = 0
@@ -326,7 +445,8 @@ class ReplicaModel:
             done = []
             for i, rr in enumerate(self.running):
                 if rr.kv_tokens % self.p.block_size == 0:
-                    self.free_blocks -= 1
+                    self.pool.allocate_unchecked(rr.req.request_id,
+                                                 self.p.block_size)
                 rr.kv_tokens += 1
                 rr.req.generated += 1
                 rr.remaining -= 1
@@ -334,7 +454,7 @@ class ReplicaModel:
                     done.append(i)
             for i in reversed(done):
                 rr = self.running.pop(i)
-                self.free_blocks += self._blocks_for(rr.kv_tokens)
+                self._release(rr)
                 self._finish(rr.req, now + dt)
         return dt
 

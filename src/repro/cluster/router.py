@@ -23,8 +23,9 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-from ..core.cost_model import CostModel
+from ..core.cost_model import ICI_BW, CostModel
 from ..core.partition import edge_divergence
+from ..kvplane.topology import PrefixFetch
 from .replica import ReplicaModel
 
 
@@ -98,7 +99,8 @@ class EWSJFRouter(Router):
                  kv_pressure_slope: float = 5.0,
                  contention_horizon: int = 8,
                  use_cache: bool = True,
-                 policy_store=None):
+                 policy_store=None,
+                 directory=None, topology=None):
         self.cost = cost or CostModel()
         self.kv_pressure_knee = kv_pressure_knee
         self.kv_pressure_slope = kv_pressure_slope
@@ -106,6 +108,16 @@ class EWSJFRouter(Router):
         # before our queue's head gets picked (bounded lookahead)
         self.contention_horizon = contention_horizon
         self.use_cache = use_cache
+        # KV plane (prefix reuse): with a fleet PrefixDirectory and/or
+        # per-replica radix caches, ``route_cost`` consumes *effective*
+        # lengths — a replica already holding the request's prefix only
+        # pays the uncached suffix (local hit), a remote holder pays the
+        # suffix plus the modeled (compute-overlapped) KV transfer — so
+        # routing steers requests toward the KV they can reuse.  Both None
+        # ⇒ the prefix terms vanish and decisions are identical to the
+        # prefix-blind router.
+        self.directory = directory
+        self.topology = topology
         # Optional fleet PolicyStore: when set, replicas whose installed
         # partition diverges from the global map pay a mild cost factor
         # (see _alignment_factor) so routing steers toward structure that
@@ -131,8 +143,64 @@ class EWSJFRouter(Router):
                                if k in live}
             self._align_memo = {k: v for k, v in self._align_memo.items()
                                 if k in live}
-        return min(pool, key=lambda r: (self.route_cost(r, req, now),
+        best = min(pool, key=lambda r: (self.route_cost(r, req, now),
                                         r.replica_id))
+        self._annotate_prefix(best, req)
+        return best
+
+    # ---- KV plane (prefix reuse) ----------------------------------------
+
+    def _prefix_active(self, replica: ReplicaModel, req) -> bool:
+        return bool(req.prompt_hashes) and (replica.radix is not None
+                                            or self.directory is not None)
+
+    def _prefix_terms(self, replica: ReplicaModel, req
+                      ) -> tuple[int, Optional[PrefixFetch], float]:
+        """Best prefix-reuse option for ``req`` on ``replica``:
+        ``(cached_tokens, fetch_plan, exposed_transfer_s)``.  Local radix
+        blocks are free; a deeper remotely advertised prefix is worth
+        fetching only when the suffix-cost saving beats the exposed
+        (compute-overlapped) transfer time — and never onto a replica whose
+        KV pool is already near exhaustion (health-monitor-smoothed
+        occupancy), where the fetched blocks would only churn."""
+        L = int(req.prompt_len)
+        hashes = req.prompt_hashes
+        bs = replica.p.block_size
+        local = replica.prefix_probe(hashes)
+        cached = min(local * bs, L - 1) if local else 0
+        plan: Optional[PrefixFetch] = None
+        exposed = 0.0
+        if self.directory is not None:
+            occ = replica.kv_ewma if replica.kv_ewma > 0 \
+                else replica.kv_occupancy()
+            if occ <= self.kv_pressure_knee:
+                src, blocks = self.directory.best_holder(
+                    hashes, exclude=replica.replica_id)
+                if src >= 0 and blocks > local:
+                    n_bytes = ((blocks - local) * bs
+                               * self.cost.model.kv_bytes_per_token)
+                    ex = (self.topology.exposed_time(n_bytes, src,
+                                                     replica.replica_id)
+                          if self.topology is not None
+                          else n_bytes / ICI_BW)
+                    remote_cached = min(blocks * bs, L - 1)
+                    saving = (self.cost.prefill_cost(L, cached)
+                              - self.cost.prefill_cost(L, remote_cached))
+                    if saving > ex:
+                        cached, plan, exposed = remote_cached, PrefixFetch(
+                            src_replica=src, blocks=blocks,
+                            kv_bytes=n_bytes), ex
+        return cached, plan, exposed
+
+    def _annotate_prefix(self, replica: ReplicaModel, req) -> None:
+        """Stamp the winning replica's prefix plan onto the request: the
+        scheduler queues/scores it by its effective length, and the replica
+        executes the fetch at dispatch.  No-op when the KV plane is off."""
+        if not self._prefix_active(replica, req):
+            return
+        cached, plan, _ = self._prefix_terms(replica, req)
+        req.cached_len = cached
+        req.prefix_fetch = plan
 
     def _queue_works(self, replica: ReplicaModel,
                      snap) -> dict[int, tuple[float, float]]:
@@ -196,8 +264,19 @@ class EWSJFRouter(Router):
         return factor
 
     def route_cost(self, replica: ReplicaModel, req, now: float) -> float:
-        """Estimated start delay for ``req`` if routed to ``replica``."""
+        """Estimated delay-to-first-token contribution of routing ``req``
+        to ``replica``.  With the KV plane active the request is costed at
+        its *effective* length there (local hit → suffix only; remote hit →
+        suffix plus overlapped KV-transfer) and the replica-dependent own
+        prefill cost joins the comparison; with it off, the terms vanish
+        and this is exactly the prefix-blind start-delay estimate."""
         L = float(req.prompt_len)
+        own = 0.0
+        if self._prefix_active(replica, req):
+            cached, _, exposed = self._prefix_terms(replica, req)
+            L = max(L - cached, 1.0)
+            own = (self.cost.prefill_cost(float(req.prompt_len), cached)
+                   / max(replica.speed, 1e-6)) + exposed
         snap = replica.scheduler_snapshot(now, fresh=not self.use_cache)
         works = self._queue_works(replica, snap)
         mine = snap.queue_for(L)
@@ -236,7 +315,10 @@ class EWSJFRouter(Router):
         #    agrees with the global policy map (no-op without a store).
         if self.policy_store is not None:
             delay *= self._alignment_factor(replica, snap)
-        return delay
+        # 6) KV plane: the request's own (suffix-only) prefill cost + any
+        #    planned remote-fetch exposure — the replica-dependent term
+        #    that steers toward prefix holders (0.0 when inactive).
+        return delay + own
 
 
 def make_router(name: str, cost: CostModel | None = None, **kw) -> Router:

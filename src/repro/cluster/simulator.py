@@ -28,6 +28,8 @@ import numpy as np
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
 from ..core.types import Request, RequestState
+from ..kvplane.directory import PrefixDirectory
+from ..kvplane.topology import LinkTopology
 from .admission import AdmissionController, classify_by_length
 from .autoscaler import SLOBurnAutoscaler
 from .disagg import HandoffChannel
@@ -65,6 +67,7 @@ class ClusterSimResult:
     admission: dict = field(default_factory=dict)
     autoscale: dict = field(default_factory=dict)
     policy: dict = field(default_factory=dict)
+    prefix: dict = field(default_factory=dict)   # KV plane (directory+caches)
     readmitted: int = 0
 
     @property
@@ -113,14 +116,27 @@ class ClusterSimulator:
                  channel: Optional[HandoffChannel] = None,
                  health: HealthConfig | None = None,
                  autoscaler: Optional[SLOBurnAutoscaler] = None,
-                 policy_store: Optional[PolicyStore] = None):
+                 policy_store: Optional[PolicyStore] = None,
+                 topology: Optional[LinkTopology] = None,
+                 prefix_directory: Optional[PrefixDirectory] = None):
         self.replicas: list[ReplicaModel] = list(replicas)
         self.router = router
         self.cost = cost
         self.admission = admission
         self.autoscaler = autoscaler
         self.policy_store = policy_store
-        self.channel = channel or HandoffChannel()
+        self.prefix_directory = prefix_directory
+        # KV movement: per-link topology with compute overlap (handoffs
+        # *and* remote prefix fetches share its link clocks).  An
+        # explicitly passed legacy ``HandoffChannel`` still wins for
+        # *handoffs* (serialized-ICI model, kept for comparison), but the
+        # topology always exists — otherwise a wired prefix directory
+        # would plan remote fetches that replicas can never execute.
+        self.topology = topology or LinkTopology()
+        self.channel = channel if channel is not None else self.topology
+        for rep in self.replicas:
+            rep.topology = self.topology
+            rep.peer_alive_fn = self._peer_alive
         self.monitor = HealthMonitor(health)
         self.reenqueued = 0
         self.readmitted = 0
@@ -132,12 +148,19 @@ class ClusterSimulator:
                 rep.drop_fn = admission.expired
         # One strategic plane: hand the shared store to the router (global
         # partition map for routing) and the autoscaler (warm starts) unless
-        # the caller wired their own.
+        # the caller wired their own.  Same for the KV plane: the router
+        # reads the shared prefix directory + topology for effective-length
+        # routing costs.
         if policy_store is not None:
             if isinstance(router, EWSJFRouter) and router.policy_store is None:
                 router.policy_store = policy_store
             if autoscaler is not None and autoscaler.policy_store is None:
                 autoscaler.policy_store = policy_store
+        if isinstance(router, EWSJFRouter):
+            if prefix_directory is not None and router.directory is None:
+                router.directory = prefix_directory
+            if self.topology is not None and router.topology is None:
+                router.topology = self.topology
 
     # ---- membership -------------------------------------------------------
 
@@ -148,6 +171,8 @@ class ClusterSimulator:
         rep = ReplicaModel(rid, self.cost, scheduler=scheduler, params=params,
                            role=role, speed=speed)
         rep.last_heartbeat = self.now
+        rep.topology = self.topology
+        rep.peer_alive_fn = self._peer_alive
         if self.admission is not None:
             rep.drop_fn = self.admission.expired
         # Warm start: a new replica inherits the fleet's learned policy
@@ -179,16 +204,38 @@ class ClusterSimulator:
         admitted — deferred requests park in the controller's re-admission
         queue and are re-offered by ``_pump_retries``."""
         if self.admission is not None:
-            dec = self.admission.admit(req, self.now,
-                                       self._est_best_delay(req))
+            rep, rid = self._replica_hint(req)
+            est = (self.router.route_cost(rep, req, self.now)
+                   if rid is not None and isinstance(self.router, EWSJFRouter)
+                   else self._est_best_delay(req))
+            dec = self.admission.admit(req, self.now, est, replica_id=rid)
             if not dec.admitted:
                 if dec.reason != "defer":
                     req.state = RequestState.FAILED
                     req.finish_time = self.now
                     self.shed.append(req)
                 return False
+            if rid is not None:
+                rep.submit(req, self.now)      # already routed for the hint
+                return True
         self._route(req)
         return True
+
+    def _peer_alive(self, replica_id: int) -> bool:
+        """Liveness oracle for replicas' remote-prefix fetches: a fetch plan
+        stamped before its source failed must not execute."""
+        return any(r.replica_id == replica_id and r.alive
+                   for r in self.replicas)
+
+    def _replica_hint(self, req: Request
+                      ) -> tuple[Optional[ReplicaModel], Optional[int]]:
+        """Tentative routing decision for per-replica admission budget
+        shares.  Only taken when the controller wants it, so the default
+        admission path keeps its historical select-after-admit order."""
+        if not self.admission.wants_replica_hint():
+            return None, None
+        rep = self.router.select(self.replicas, req, self.now)
+        return rep, (rep.replica_id if rep is not None else None)
 
     def _pump_retries(self, now: float) -> None:
         """Re-offer parked requests whose backoff elapsed; expired ones are
@@ -196,11 +243,18 @@ class ClusterSimulator:
         due, expired = self.admission.due_retries(now)
         self.shed.extend(expired)
         for req in due:
-            dec = self.admission.admit(req, now, self._est_best_delay(req),
-                                       retry=True)
+            rep, rid = self._replica_hint(req)
+            est = (self.router.route_cost(rep, req, now)
+                   if rid is not None and isinstance(self.router, EWSJFRouter)
+                   else self._est_best_delay(req))
+            dec = self.admission.admit(req, now, est, retry=True,
+                                       replica_id=rid)
             if dec.admitted:
                 self.readmitted += 1
-                self._route(req)
+                if rid is not None:
+                    rep.submit(req, now)
+                else:
+                    self._route(req)
             elif dec.reason != "defer":
                 req.state = RequestState.FAILED
                 req.finish_time = now
@@ -218,6 +272,8 @@ class ClusterSimulator:
     def _handle_failure(self, rep: ReplicaModel) -> None:
         if self.policy_store is not None:
             self.policy_store.forget(rep.replica_id)
+        if self.prefix_directory is not None:
+            self.prefix_directory.forget(rep.replica_id)
         for req in rep.fail():
             self.reenqueued += 1
             self._route(req)
@@ -225,8 +281,21 @@ class ClusterSimulator:
     def _handle_drain(self, rep: ReplicaModel) -> None:
         if self.policy_store is not None:
             self.policy_store.forget(rep.replica_id)
+        if self.prefix_directory is not None:
+            self.prefix_directory.forget(rep.replica_id)
         for req in rep.start_drain():
             self._route(req)
+
+    def _prefix_sync(self, now: float) -> None:
+        """One KV-plane directory round: every live caching replica
+        advertises its hot prefixes, then the store merges to a new (or
+        unchanged) epoch — the same publish→merge cadence pattern as the
+        policy store, and equally non-blocking."""
+        for rep in self.replicas:
+            if rep.alive and rep.radix is not None:
+                self.prefix_directory.publish(rep.replica_id,
+                                              rep.prefix_adverts(), now)
+        self.prefix_directory.merge(now)
 
     def _policy_sync(self, now: float) -> None:
         """One strategic-plane round: publish → merge → broadcast (the
@@ -329,6 +398,9 @@ class ClusterSimulator:
                 self._autoscale_tick(t)
             if self.policy_store is not None and self.policy_store.due(t):
                 self._policy_sync(t)
+            if self.prefix_directory is not None \
+                    and self.prefix_directory.due(t):
+                self._prefix_sync(t)
             if self.backlog:
                 still = []
                 for req in self.backlog:
@@ -340,10 +412,13 @@ class ClusterSimulator:
                 self.backlog = still
             if self.monitor.due(t):
                 rate = self.monitor.observe_throughput(self.replicas, t)
+                self.monitor.observe_kv(self.replicas)
                 if self.admission is not None:
                     # adaptive refill: budget rate follows measured fleet
-                    # throughput (no-op unless AdmissionConfig enables it)
+                    # throughput (no-op unless AdmissionConfig enables it);
+                    # per-replica shares follow the per-replica EWMAs.
                     self.admission.set_measured_rate(rate)
+                    self.admission.set_replica_rates(self.monitor.replica_rate)
                 dead, drain = self.monitor.check(self.replicas, t)
                 for rep in dead:
                     self._handle_failure(rep)
@@ -383,6 +458,8 @@ class ClusterSimulator:
                 nxt.append(t + self.autoscaler.cfg.check_interval)
             if self.policy_store is not None and self._in_system():
                 nxt.append(t + self.policy_store.cfg.sync_interval)
+            if self.prefix_directory is not None and self._in_system():
+                nxt.append(t + self.prefix_directory.cfg.sync_interval)
             if nxt:
                 t = max(t + 1e-9, min(nxt))
             elif not stepped:
@@ -406,7 +483,21 @@ class ClusterSimulator:
                        else {}),
             policy=(self.policy_store.stats() if self.policy_store is not None
                     else {}),
+            prefix=self._prefix_stats(),
             readmitted=self.readmitted)
+
+    def _prefix_stats(self) -> dict:
+        caches = {rep.replica_id: rep.radix.stats()
+                  for rep in self.replicas if rep.radix is not None}
+        if not caches and self.prefix_directory is None:
+            return {}
+        out = {"caches": caches,
+               "saved_tokens": sum(rep.prefix_saved_tokens
+                                   for rep in self.replicas),
+               "kv": self.monitor.kv_stats()}
+        if self.prefix_directory is not None:
+            out["directory"] = self.prefix_directory.stats()
+        return out
 
     def _in_system(self) -> int:
         return sum(rep.sched.waiting() + rep.inflight() + len(rep.inbox)
@@ -414,12 +505,16 @@ class ClusterSimulator:
             + len(self.backlog)
 
     def _replica_stat(self, rep: ReplicaModel) -> dict:
-        return {"replica_id": rep.replica_id, "role": rep.role,
+        stat = {"replica_id": rep.replica_id, "role": rep.role,
                 "speed": rep.speed, "alive": rep.alive,
                 "draining": rep.draining, "served": rep.served,
                 "preemptions": rep.preemptions, "ticks": rep.ticks,
                 "busy_time": rep.busy_time,
                 "kv_occupancy": rep.kv_occupancy()}
+        if rep.radix is not None:
+            stat["prefix_cache"] = rep.radix.stats()
+            stat["prefix_saved_tokens"] = rep.prefix_saved_tokens
+        return stat
 
 
 def run_router_comparison(make_replicas: Callable[[], list[ReplicaModel]],

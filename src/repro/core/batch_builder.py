@@ -33,7 +33,13 @@ class BatchBudget:
                                # the batch's bucket edge (GPU mode: no cap)
 
     def blocks_needed(self, req: Request) -> int:
-        return -(-int(req.prompt_len) // self.block_size)
+        """KV blocks the request must newly allocate: its full paged
+        footprint minus any cached prefix blocks it can share (KV plane;
+        equal to the full footprint when cached_len is 0)."""
+        total = -(-int(req.prompt_len) // self.block_size)
+        if req.cached_len > 0:
+            total -= int(req.cached_len) // self.block_size
+        return max(total, 1)
 
 
 def _bucket_edge(tokens: int, buckets: tuple[int, ...]) -> int:
@@ -66,8 +72,8 @@ class BatchBuilder:
         # Backfill must preserve batch homogeneity (the whole point of the
         # partitioning): it may not raise the primary batch's bucket edge.
         # Only meaningful under TPU bucket padding; GPU mode has no edge.
-        edge = (_bucket_edge(max(r.prompt_len for r in plan.requests),
-                             self.buckets)
+        edge = (_bucket_edge(max(int(r.effective_len)
+                                 for r in plan.requests), self.buckets)
                 if plan.requests and self.budget.pad_mode else None)
         if len(plan.requests) < self.budget.max_requests and \
                 plan.total_tokens < self.budget.max_tokens:
@@ -83,8 +89,8 @@ class BatchBuilder:
         # Bucket-pad to the largest member's bucket edge (one compiled shape
         # per batch => pad every row to the same edge).
         if plan.requests:
-            edge = _bucket_edge(max(r.prompt_len for r in plan.requests),
-                                self.buckets)
+            edge = _bucket_edge(max(int(r.effective_len)
+                                    for r in plan.requests), self.buckets)
             plan.padded_tokens = edge * len(plan.requests)
         return plan
 
@@ -94,11 +100,11 @@ class BatchBuilder:
         took = 0
         while len(q):
             head = q.peek()
-            if max_len is not None and head.prompt_len > max_len:
+            if max_len is not None and head.effective_len > max_len:
                 break
             if len(plan.requests) >= self.budget.max_requests:
                 break
-            if plan.total_tokens + head.prompt_len > self.budget.max_tokens \
+            if plan.total_tokens + head.effective_len > self.budget.max_tokens \
                     and plan.requests:
                 break
             if free_blocks is not None:
@@ -110,6 +116,6 @@ class BatchBuilder:
                 break
             req = q.pop()
             plan.requests.append(req)
-            plan.total_tokens += int(req.prompt_len)
+            plan.total_tokens += int(req.effective_len)
             took += 1
         return took

@@ -92,6 +92,34 @@ class CostModel:
         mem = self.prefill_bytes(b) / (self.n_chips * HBM_BW * self.hbm_eff)
         return max(comp, mem)
 
+    def prefill_cost(self, b: float, cached: float = 0.0) -> float:
+        """Effective-workload prefill cost (KV plane): seconds to prefill a
+        length-``b`` prompt whose first ``cached`` tokens are already
+        resident in the KV cache.  Only the uncached suffix ``s = b-cached``
+        runs through the model (dense FLOPs scale with s; each suffix token
+        still attends to the *full* context, so the attention term uses
+        ``cached + s/2`` average context); on the memory side the cached
+        prefix KV is read but not recomputed or rewritten.  ``cached=0``
+        reduces exactly to :meth:`c_prefill`."""
+        if cached <= 0.0:
+            return self.c_prefill(b)
+        s = max(b - cached, 1.0)
+        cached = b - s
+        m = self.model
+        dense = 2.0 * m.n_params_active * s
+        if m.attn_kind == "linear":
+            ctx = 0.0
+        elif m.attn_kind == "window":
+            ctx = min(b, self.model.window) / 2.0
+        else:
+            ctx = cached + s / 2.0
+        attn = 4.0 * m.n_layers * m.d_model * s * ctx
+        comp = (dense + attn) / (self.n_chips * PEAK_FLOPS_BF16 * self.mfu)
+        mem = (m.n_params_active * m.dtype_bytes
+               + m.kv_bytes_per_token * b) / (
+                   self.n_chips * HBM_BW * self.hbm_eff)
+        return max(comp, mem)
+
     # ---- step-level costs (used by the simulator) ----------------------
 
     def prefill_step_time(self, batch_tokens: int, mean_ctx: float) -> float:

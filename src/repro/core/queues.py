@@ -49,17 +49,20 @@ class SchedulerQueue:
         return self.requests[0] if self.requests else None
 
     def push(self, req: Request) -> None:
+        # All queue statistics run on the *effective* length (uncached
+        # suffix, KV plane) — identical to prompt_len when cached_len is 0.
+        L = req.effective_len
         self.requests.append(req)
         self.routed_count += 1
-        self.routed_len_sum += req.prompt_len
-        self.tok_sum += int(req.prompt_len)
-        self.obs_min = min(self.obs_min, float(req.prompt_len))
-        self.obs_max = max(self.obs_max, float(req.prompt_len))
+        self.routed_len_sum += L
+        self.tok_sum += int(L)
+        self.obs_min = min(self.obs_min, L)
+        self.obs_max = max(self.obs_max, L)
         self.empty_cnt = 0
 
     def pop(self) -> Request:
         req = self.requests.popleft()
-        self.tok_sum -= int(req.prompt_len)
+        self.tok_sum -= int(req.effective_len)
         return req
 
     def clear_requests(self) -> list[Request]:
@@ -133,8 +136,12 @@ class QueueManager:
            containing interval;
         3. with no observed data on one side (cold start / new extreme),
            fall back to interval routing — there is no meaningful gap yet.
+
+        Routing runs on the request's *effective* length: a long prompt
+        with a hot cached prefix joins the queue of the short job it
+        actually is (KV plane; identical to prompt_len when cached_len=0).
         """
-        L = float(req.prompt_len)
+        L = req.effective_len
         qi = self._find_interval(L)
         q = self.queues[qi]
         c = self.bubble_cfg
@@ -204,9 +211,9 @@ class QueueManager:
         # Move any waiting requests that now belong to the new intervals.
         stay, move_b, move_t = deque(), [], []
         for r in q.requests:
-            if bubble.bounds.contains(r.prompt_len):
+            if bubble.bounds.contains(r.effective_len):
                 move_b.append(r)
-            elif tail.bounds.contains(r.prompt_len):
+            elif tail.bounds.contains(r.effective_len):
                 move_t.append(r)
             else:
                 stay.append(r)
@@ -215,11 +222,12 @@ class QueueManager:
         q.obs_min, q.obs_max = float("inf"), float("-inf")
         q.routed_count, q.routed_len_sum, q.tok_sum = 0, 0.0, 0
         for r in stay:
-            q.obs_min = min(q.obs_min, float(r.prompt_len))
-            q.obs_max = max(q.obs_max, float(r.prompt_len))
+            L = r.effective_len
+            q.obs_min = min(q.obs_min, L)
+            q.obs_max = max(q.obs_max, L)
             q.routed_count += 1
-            q.routed_len_sum += r.prompt_len
-            q.tok_sum += int(r.prompt_len)
+            q.routed_len_sum += L
+            q.tok_sum += int(L)
         # re-label moved requests: queue_id drives delta publication
         # (scheduler._snapshot_delta) and must name the queue that now
         # actually holds the request

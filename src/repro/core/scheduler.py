@@ -102,7 +102,7 @@ class FCFSScheduler(BaseScheduler):
     def submit(self, req: Request, now: float) -> None:
         req.enqueue_time = now
         self.queue.append(req)
-        self._tok_sum += int(req.prompt_len)
+        self._tok_sum += int(req.effective_len)
         self._publish()
 
     def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
@@ -111,7 +111,8 @@ class FCFSScheduler(BaseScheduler):
         used = 0
         while self.queue and len(plan.requests) < budget.max_requests:
             head = self.queue[0]
-            if plan.requests and plan.total_tokens + head.prompt_len > budget.max_tokens:
+            if plan.requests and plan.total_tokens + head.effective_len \
+                    > budget.max_tokens:
                 break
             if free is not None:
                 need = budget.blocks_needed(head)
@@ -119,13 +120,13 @@ class FCFSScheduler(BaseScheduler):
                     break
                 used += need
             plan.requests.append(self.queue.pop(0))
-            plan.total_tokens += int(head.prompt_len)
-            self._tok_sum -= int(head.prompt_len)
+            plan.total_tokens += int(head.effective_len)
+            self._tok_sum -= int(head.effective_len)
         if plan.requests:
             self._publish()
             from .batch_builder import DEFAULT_BUCKETS, _bucket_edge
-            edge = _bucket_edge(max(r.prompt_len for r in plan.requests),
-                                DEFAULT_BUCKETS)
+            edge = _bucket_edge(max(int(r.effective_len)
+                                    for r in plan.requests), DEFAULT_BUCKETS)
             plan.padded_tokens = edge * len(plan.requests)
         return plan
 
@@ -139,7 +140,7 @@ class FCFSScheduler(BaseScheduler):
         q = QueueSnapshot(
             queue_id=0, index=0, lo=0.0, hi=float("inf"),
             depth=len(self.queue), tokens=tokens, mean_len=mean,
-            head_len=float(head.prompt_len) if head else None,
+            head_len=head.effective_len if head else None,
             head_wait=head.wait_time(now) if head else 0.0,
             # FIFO has no density weighting: the head's "score" is its wait.
             head_score=head.wait_time(now) if head else 0.0)
@@ -159,7 +160,7 @@ class SJFScheduler(FCFSScheduler):
     name = "sjf"
 
     def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
-        self.queue.sort(key=lambda r: (r.prompt_len, r.arrival_time))
+        self.queue.sort(key=lambda r: (r.effective_len, r.arrival_time))
         return super().tick(now, budget)
 
 
@@ -174,7 +175,7 @@ class StaticPriorityScheduler(FCFSScheduler):
         self.short_threshold = short_threshold
 
     def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
-        self.queue.sort(key=lambda r: (r.prompt_len > self.short_threshold,
+        self.queue.sort(key=lambda r: (r.effective_len > self.short_threshold,
                                        r.arrival_time))
         return super().tick(now, budget)
 
@@ -258,7 +259,8 @@ class EWSJFScheduler(BaseScheduler):
         if self.cfg.enable_bubbles:
             self.manager.route(req)
         else:
-            q = self.manager.queues[self.manager._find_interval(req.prompt_len)]
+            q = self.manager.queues[
+                self.manager._find_interval(req.effective_len)]
             q.push(req)
             req.queue_id = q.queue_id
         self._snapshot_delta([req.queue_id] if req.queue_id is not None
@@ -276,13 +278,13 @@ class EWSJFScheduler(BaseScheduler):
         total_reqs = 0
         total_tokens = 0
         for i, q in enumerate(self.manager.queues):
-            tokens = sum(int(r.prompt_len) for r in q.requests)
+            tokens = sum(int(r.effective_len) for r in q.requests)
             head = q.peek()
             queues.append(QueueSnapshot(
                 queue_id=q.queue_id, index=i,
                 lo=q.bounds.lo, hi=q.bounds.hi,
                 depth=len(q), tokens=tokens, mean_len=q.mean_len,
-                head_len=float(head.prompt_len) if head else None,
+                head_len=head.effective_len if head else None,
                 head_wait=head.wait_time(now) if head else 0.0,
                 head_score=(compute_score(head, profiles[q.queue_id], now,
                                           self.c_prefill) if head else 0.0)))
@@ -313,7 +315,7 @@ class EWSJFScheduler(BaseScheduler):
             return None
         p = self._snap_profiles[q.queue_id]
         w = p.weights
-        b = float(head.prompt_len)
+        b = head.effective_len
         cost = max(self.c_prefill(b), 1e-9)
         qf = (p.index + 1.0) / (p.mean_len + 1.0)
         base = qf * (w.w_base + w.w_fairness * log(b + 1.0))
@@ -597,7 +599,8 @@ class EWSJFScheduler(BaseScheduler):
         # Close the trial: compute reward over the trial window.
         elapsed = max(now - self._trial_start, 1e-9)
         stats = self.monitor.window_stats(elapsed)
-        qlens = [np.asarray([r.prompt_len for r in q.requests], dtype=np.float64)
+        qlens = [np.asarray([r.effective_len for r in q.requests],
+                            dtype=np.float64)
                  for q in self.manager.queues]
         terms = reward_terms(qlens, stats, len(self.manager.queues))
         tokens = self.monitor.total_tokens_out - self._trial_token_mark

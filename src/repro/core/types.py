@@ -39,6 +39,18 @@ class Request:
     prompt_tokens: Optional[Any] = None     # int array when actually executing
     priority_class: int = 0                 # optional operator hint (unused by EWSJF)
 
+    # KV plane (prefix reuse).  ``prompt_hashes`` is the chained token-block
+    # hash chain of the prompt (kvplane.radix) — None means no reuse is
+    # possible.  ``cached_len`` is the router's estimate of prefix tokens
+    # already resident on the assigned replica; the scheduler stack scores
+    # and queues on the *effective* length (the uncached suffix), since
+    # that is the work the request actually costs.  ``prefix_fetch`` is a
+    # planned remote-prefix transfer (kvplane topology), set by a
+    # prefix-aware router and consumed at dispatch.
+    prompt_hashes: Optional[tuple] = None
+    cached_len: int = 0
+    prefix_fetch: Optional[Any] = None
+
     # Lifecycle bookkeeping (filled in by the engine / simulator).
     state: RequestState = RequestState.WAITING
     enqueue_time: float = 0.0               # when routed into a queue
@@ -50,6 +62,18 @@ class Request:
 
     def wait_time(self, now: float) -> float:
         return max(0.0, now - self.arrival_time)
+
+    @property
+    def effective_len(self) -> float:
+        """Prompt tokens that must actually be prefilled (the uncached
+        suffix).  Equal to ``prompt_len`` whenever the KV plane is off
+        (``cached_len`` 0), so every effective-length consumer degrades to
+        the pre-KV-plane arithmetic bit-for-bit.  At least one token is
+        always recomputed (a fully cached prompt still runs a 1-token
+        prefill to produce its first logit)."""
+        if self.cached_len <= 0:
+            return float(self.prompt_len)
+        return float(max(self.prompt_len - self.cached_len, 1))
 
     @property
     def ttft(self) -> Optional[float]:

@@ -47,6 +47,18 @@ class BlockPool:
         self.allocs[seq_id] = self.allocs.get(seq_id, 0) + need
         return True
 
+    def allocate_unchecked(self, seq_id, tokens: int) -> int:
+        """Allocate without the free-space guard (``free_blocks`` may go
+        negative).  The cluster replica executor uses this to reproduce the
+        DES's historical accounting exactly: batch admission is guarded
+        upstream on *prompt* blocks, so the +1-token decode block of a
+        boundary-length prompt may transiently overdraw the pool — the
+        decode-time preemption loop then reclaims.  Returns blocks taken."""
+        need = self.blocks_for(tokens)
+        self.free_blocks -= need
+        self.allocs[seq_id] = self.allocs.get(seq_id, 0) + need
+        return need
+
     def grow(self, seq_id: int, new_total_tokens: int) -> bool:
         """Ensure seq owns enough blocks for new_total_tokens; may fail."""
         need = self.blocks_for(new_total_tokens) - self.allocs.get(seq_id, 0)

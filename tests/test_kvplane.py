@@ -1,0 +1,603 @@
+"""KV plane: radix prefix cache, fleet directory, link topology,
+effective-workload scoring/routing, and the prefix-disabled equivalence
+guarantee."""
+
+import copy
+import random
+
+import numpy as np
+import pytest
+
+from repro.cluster import (AdmissionConfig, AdmissionController,
+                           ClusterSimulator, EWSJFRouter, HealthMonitor,
+                           LinkTopology, LinkTopologyConfig, PrefixDirectory,
+                           PrefixDirectoryConfig, ReplicaParams, make_fleet)
+from repro.core import (CostModel, EWSJFConfig, EWSJFScheduler, Request,
+                        WorkloadSpec)
+from repro.core.scoring import QueueProfile, compute_score, weights_for_queue
+from repro.core.types import MetaParams
+from repro.kvplane import (RadixPrefixIndex, SharedPrefixWorkloadSpec,
+                           agentic_mix, chain_block_hashes)
+from repro.serving.kv_cache import BlockPool
+
+
+def cost_model():
+    return CostModel(mfu=0.15, hbm_eff=0.7)
+
+
+def ewsjf_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=32, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+def chain(n_blocks, seed=1, block_size=16):
+    return chain_block_hashes([seed * 1000 + j
+                               for j in range(n_blocks * block_size)],
+                              block_size)
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix index
+# ---------------------------------------------------------------------------
+
+class TestRadix:
+    def test_hash_chaining_identifies_prefixes(self):
+        a = chain_block_hashes(list(range(64)), 16)
+        b = chain_block_hashes(list(range(48)) + [99] * 16, 16)
+        assert a[:3] == b[:3] and a[3] != b[3]
+        # partial trailing block is never hashed
+        assert len(chain_block_hashes(list(range(40)), 16)) == 2
+
+    def test_insert_match_share_pool(self):
+        pool = BlockPool(64, 16)
+        idx = RadixPrefixIndex(pool, 16)
+        node, new = idx.insert(chain(8), now=1.0)
+        assert new == 8 and node.depth == 8
+        assert pool.free_blocks == 56
+        m = idx.match(chain(8)[:5], now=2.0)
+        assert m.blocks == 5
+        # a diverging chain shares only the common prefix
+        other = chain(8)[:4] + chain(4, seed=2)
+        _, new2 = idx.insert(other, now=3.0)
+        assert new2 == 4
+        assert idx.cached_blocks == 12
+        idx.check_invariants()
+
+    def test_lru_eviction_spares_pins(self):
+        pool = BlockPool(8, 16)
+        idx = RadixPrefixIndex(pool, 16)
+        hot = chain(4, seed=1)
+        cold = chain(4, seed=2)
+        n1, _ = idx.insert(hot, now=10.0)
+        idx.insert(cold, now=1.0)
+        assert pool.free_blocks == 0
+        idx.pin(n1)
+        fresh = chain(3, seed=3)
+        _, new = idx.insert(fresh, now=20.0)
+        assert new == 3                       # evicted cold leaves, not hot
+        assert idx.match(hot, touch=False).blocks == 4
+        assert idx.match(cold, touch=False).blocks < 4
+        idx.unpin(n1)
+        idx.check_invariants()
+
+    def test_insert_degrades_under_pressure(self):
+        pool = BlockPool(4, 16)
+        idx = RadixPrefixIndex(pool, 16)
+        node, new = idx.insert(chain(10), now=0.0)
+        assert new == 4 and idx.cached_blocks == 4
+        assert node.depth == 4                # closed prefix, not random blocks
+        idx.check_invariants()
+
+    def test_capacity_cap_respected(self):
+        pool = BlockPool(64, 16)
+        idx = RadixPrefixIndex(pool, 16, capacity_blocks=6)
+        idx.insert(chain(4, seed=1), now=1.0)
+        idx.insert(chain(4, seed=2), now=2.0)
+        assert idx.cached_blocks <= 6
+        idx.check_invariants()
+
+    def test_property_random_interleavings_keep_invariants(self):
+        """Radix insert/match/evict/pin under random interleavings never
+        breaks the shared BlockPool accounting (the tentpole invariant)."""
+        rng = random.Random(0)
+        for trial in range(25):
+            pool = BlockPool(rng.randint(4, 40), 16)
+            idx = RadixPrefixIndex(pool, 16)
+            pinned = []
+            tenants = 0
+            for _ in range(120):
+                op = rng.random()
+                c = chain(rng.randint(1, 12), seed=rng.randint(1, 6))
+                if op < 0.45:
+                    idx.insert(c, now=rng.random() * 100)
+                elif op < 0.65:
+                    m = idx.match(c, now=rng.random() * 100)
+                    if m.node is not None and rng.random() < 0.5:
+                        idx.pin(m.node)
+                        pinned.append(m.node)
+                elif op < 0.8 and pinned:
+                    idx.unpin(pinned.pop(rng.randrange(len(pinned))))
+                elif op < 0.9:
+                    idx.evict(rng.randint(1, 4))
+                elif tenants < 2 and pool.free_blocks > 0:
+                    # a foreign tenant (a "running sequence") takes blocks
+                    pool.allocate(("seq", trial, tenants), 16)
+                    tenants += 1
+                idx.check_invariants()
+            for node in pinned:
+                idx.unpin(node)
+            # full eviction returns every radix block to the pool
+            idx.evict(10 ** 9)
+            assert idx.cached_blocks == 0
+            assert pool.free_blocks == pool.total_blocks - tenants
+            idx.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Fleet prefix directory
+# ---------------------------------------------------------------------------
+
+class TestDirectory:
+    def test_publish_merge_lookup(self):
+        d = PrefixDirectory(PrefixDirectoryConfig(sync_interval=1.0))
+        c = chain(6)
+        d.publish(0, {c[3]: 4}, now=0.0)
+        d.publish(1, {c[5]: 6}, now=0.0)
+        d.merge(1.0)
+        assert d.lookup(c) == {0: 4, 1: 6}
+        assert d.best_holder(c) == (1, 6)
+        assert d.best_holder(c, exclude=1) == (0, 4)
+        assert d.epoch == 1
+
+    def test_epoch_advances_only_on_change(self):
+        d = PrefixDirectory()
+        c = chain(4)
+        d.publish(0, {c[1]: 2}, now=0.0)
+        d.merge(1.0)
+        e = d.epoch
+        d.publish(0, {c[1]: 2}, now=2.0)     # identical advert
+        d.merge(2.0)
+        assert d.epoch == e
+        d.publish(0, {c[3]: 4}, now=3.0)
+        d.merge(3.0)
+        assert d.epoch == e + 1
+
+    def test_staleness_and_forget(self):
+        d = PrefixDirectory(PrefixDirectoryConfig(max_staleness_rounds=2))
+        c = chain(4)
+        d.publish(0, {c[3]: 4}, now=0.0)
+        d.publish(1, {c[1]: 2}, now=0.0)
+        for t in range(1, 5):                # replica 1 goes silent
+            d.publish(0, {c[3]: 4}, now=float(t))
+            d.merge(float(t))
+        assert 1 not in d.lookup(c)
+        assert d.stale_dropped >= 1
+        d.forget(0)
+        assert d.lookup(c) == {}
+
+    def test_bounded_entries(self):
+        d = PrefixDirectory(PrefixDirectoryConfig(max_entries=8,
+                                                  advertise_k=64))
+        for rid in range(4):
+            d.publish(rid, {h: i + 1 for i, h in
+                            enumerate(chain(8, seed=rid + 1))}, now=0.0)
+        d.merge(1.0)
+        assert len(d._by_hash) <= 8
+        assert d.truncated > 0
+
+
+# ---------------------------------------------------------------------------
+# Link topology
+# ---------------------------------------------------------------------------
+
+class TestTopology:
+    def test_per_link_parallelism(self):
+        top = LinkTopology(LinkTopologyConfig(link_bandwidth=1e9,
+                                              hop_latency=0.0, overlap=0.0))
+        # two transfers on different links do not serialize
+        e1 = top.fetch(1e9, 0, 1, now=0.0)
+        e2 = top.fetch(1e9, 2, 3, now=0.0)
+        assert e1 == pytest.approx(1.0) and e2 == pytest.approx(1.0)
+        assert top.busy[(0, 1)] == pytest.approx(1.0)
+        assert top.busy[(2, 3)] == pytest.approx(1.0)
+        # same link serializes
+        top.fetch(1e9, 0, 1, now=0.0)
+        assert top.busy[(0, 1)] == pytest.approx(2.0)
+
+    def test_compute_overlap_hides_transfer(self):
+        top = LinkTopology(LinkTopologyConfig(link_bandwidth=1e9,
+                                              hop_latency=0.0, overlap=0.75))
+        assert top.fetch(1e9, 0, 1, now=0.0) == pytest.approx(0.25)
+        assert top.exposed_time(1e9, 0, 1) == pytest.approx(0.25)
+
+    def test_ring_hops_scale_latency(self):
+        top = LinkTopology(LinkTopologyConfig(link_bandwidth=1e12,
+                                              hop_latency=1e-3, overlap=0.0,
+                                              ring_size=8))
+        assert top.transfer_time(0.0, 0, 1) == pytest.approx(1e-3)
+        assert top.transfer_time(0.0, 0, 4) == pytest.approx(4e-3)
+        assert top.transfer_time(0.0, 0, 7) == pytest.approx(1e-3)  # wrap
+
+    def test_handoff_send_compatible(self):
+        from repro.cluster import KVHandoff
+        top = LinkTopology(LinkTopologyConfig(link_bandwidth=1e9,
+                                              hop_latency=0.0, overlap=0.5))
+        h = KVHandoff(req=Request(prompt_len=10), kv_tokens=10,
+                      src_replica=0, kv_bytes=1e9)
+        top.send(h, now=1.0, dst_replica=2)
+        assert h.dst_replica == 2
+        assert h.transfer_time == pytest.approx(1.0)
+        assert h.ready_time == pytest.approx(1.5)     # only exposed tail
+        assert top.stats()["handoffs"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix workload generator
+# ---------------------------------------------------------------------------
+
+class TestWorkload:
+    def test_turns_share_prefixes(self):
+        spec = SharedPrefixWorkloadSpec(n_sessions=4, turns_per_session=3,
+                                        system_prompt_len=256, seed=0)
+        reqs = spec.generate()
+        assert len(reqs) == 12
+        sys_blocks = 256 // spec.block_size
+        # every request shares the system-prompt block chain
+        first = reqs[0].prompt_hashes[:sys_blocks]
+        assert all(r.prompt_hashes[:sys_blocks] == first for r in reqs)
+        # within a session, a later turn extends an earlier turn's chain
+        by_len = sorted(reqs, key=lambda r: len(r.prompt_hashes))
+        short, long = by_len[0], by_len[-1]
+        ov = _overlap(short.prompt_hashes, long.prompt_hashes)
+        assert ov >= sys_blocks
+        # arrivals are sorted and deterministic per seed
+        times = [r.arrival_time for r in reqs]
+        assert times == sorted(times)
+        again = SharedPrefixWorkloadSpec(n_sessions=4, turns_per_session=3,
+                                         system_prompt_len=256,
+                                         seed=0).generate()
+        assert [r.prompt_hashes for r in again] == \
+            [r.prompt_hashes for r in reqs]
+
+    def test_branching_extends_trunk(self):
+        spec = SharedPrefixWorkloadSpec(n_sessions=2, turns_per_session=4,
+                                        branch_prob=1.0, seed=3)
+        reqs = spec.generate()
+        assert len(reqs) > 8                  # branches added extra requests
+
+    def test_agentic_mix_stamps_unique_chains(self):
+        bg = WorkloadSpec(n_requests=10, arrival_rate=5.0, seed=1).generate()
+        wl = agentic_mix(SharedPrefixWorkloadSpec(n_sessions=2, seed=0), bg)
+        assert all(r.prompt_hashes is not None for r in wl)
+        # background chains never collide with each other
+        heads = [r.prompt_hashes[0] for r in bg]
+        assert len(set(heads)) == len(heads)
+
+
+def _overlap(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Effective-workload scoring / costing
+# ---------------------------------------------------------------------------
+
+class TestEffectiveWorkload:
+    def test_prefill_cost_suffix_only(self):
+        cm = cost_model()
+        assert cm.prefill_cost(2048.0) == pytest.approx(cm.c_prefill(2048.0))
+        assert cm.prefill_cost(2048.0, cached=0.0) == \
+            pytest.approx(cm.c_prefill(2048.0))
+        c90 = cm.prefill_cost(2048.0, cached=1843.0)
+        assert c90 < 0.5 * cm.c_prefill(2048.0)
+        # monotone in cached
+        assert cm.prefill_cost(2048.0, 512.0) > cm.prefill_cost(2048.0, 1024.0)
+
+    def test_effective_len_floor(self):
+        r = Request(prompt_len=100, cached_len=100)
+        assert r.effective_len == 1.0
+        r.cached_len = 0
+        assert r.effective_len == 100.0
+
+    def test_score_uses_effective_len(self):
+        cm = cost_model()
+        meta = MetaParams()
+        prof = QueueProfile(index=0, mean_len=100.0,
+                            weights=weights_for_queue(meta, 100.0))
+        long_cold = Request(prompt_len=2000, arrival_time=0.0)
+        long_hot = Request(prompt_len=2000, arrival_time=0.0, cached_len=1900)
+        short = Request(prompt_len=100, arrival_time=0.0)
+        s = {r.request_id: compute_score(r, prof, 1.0, cm.c_prefill)
+             for r in (long_cold, long_hot, short)}
+        # the hot long prompt scores like the short job it actually is
+        assert s[long_hot.request_id] > s[long_cold.request_id]
+        assert s[long_hot.request_id] == pytest.approx(
+            s[short.request_id], rel=1e-6)
+
+    def test_ewsjf_queues_on_effective_len(self):
+        s = ewsjf_factory()
+        rng = np.random.default_rng(0)
+        for i in range(200):
+            plen = int(rng.integers(32, 256)) if i % 2 else \
+                int(rng.integers(1024, 4096))
+            s.submit(Request(prompt_len=plen, arrival_time=0.0), now=0.0)
+        s.maybe_reoptimize(1.0, force=True)
+        hot = Request(prompt_len=3000, cached_len=2900, arrival_time=1.0)
+        s.submit(hot, now=1.0)
+        snap = s.snapshot(1.0)
+        q = next(q for q in snap.queues if q.queue_id == hot.queue_id)
+        assert q.hi <= 300 or q.contains(100.0)   # landed in a short queue
+
+
+# ---------------------------------------------------------------------------
+# Replica executor integration
+# ---------------------------------------------------------------------------
+
+class TestReplicaPrefix:
+    def _replica(self, **kw):
+        from repro.cluster import ReplicaModel
+        params = ReplicaParams(enable_prefix_cache=True, **kw)
+        return ReplicaModel(0, cost_model(), scheduler=ewsjf_factory(),
+                            params=params)
+
+    def test_cached_prefix_shrinks_prefill_time(self):
+        hashes = chain(128)                   # 2048-token prefix
+        cold = self._replica()
+        r1 = Request(prompt_len=2064, arrival_time=0.0, max_new_tokens=4,
+                     prompt_hashes=hashes + chain(1, seed=7))
+        cold.submit(r1, 0.0)
+        dt_cold = cold.step(0.0)
+        # same replica, same prefix, different tail → radix hit
+        r2 = Request(prompt_len=2064, arrival_time=10.0, max_new_tokens=4,
+                     prompt_hashes=hashes + chain(1, seed=8))
+        cold.submit(r2, 10.0)
+        dt_warm = cold.step(10.0)
+        assert r2.cached_len >= 2000
+        assert dt_warm < 0.55 * dt_cold
+        assert cold.prefix_saved_tokens >= 2000
+
+    def test_pool_accounting_clean_after_finish(self):
+        rep = self._replica()
+        hashes = chain(8)
+        r = Request(prompt_len=130, arrival_time=0.0, max_new_tokens=3,
+                    prompt_hashes=hashes)
+        rep.submit(r, 0.0)
+        t, guard = 0.0, 0
+        while r.state.value != "finished" and guard < 50:
+            t += max(rep.step(t), 1e-4)
+            guard += 1
+        assert r.state.value == "finished"
+        # only the cached prefix blocks remain allocated, all pins released
+        rep.radix.check_invariants()
+        assert rep.pool.free_blocks == \
+            rep.pool.total_blocks - rep.radix.cached_blocks
+        assert all(n.pins == 0 for n in rep.radix._nodes.values())
+
+    def test_disabled_replica_has_no_radix(self):
+        from repro.cluster import ReplicaModel
+        rep = ReplicaModel(0, cost_model())
+        assert rep.radix is None
+        assert rep.prefix_probe(chain(4)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Prefix-aware routing + cluster integration
+# ---------------------------------------------------------------------------
+
+class TestClusterPrefix:
+    def _workload(self):
+        spec = SharedPrefixWorkloadSpec(n_sessions=12, turns_per_session=4,
+                                        session_rate=3.0, think_time=1.0,
+                                        system_prompt_len=512, seed=1)
+        bg = WorkloadSpec(n_requests=40, arrival_rate=6.0, seed=2).generate()
+        return agentic_mix(spec, bg)
+
+    def _run(self, enable_cache, directory=False, workload=None):
+        cost = cost_model()
+        params = ReplicaParams(enable_prefix_cache=enable_cache)
+        fleet = make_fleet(4, cost, scheduler_factory=ewsjf_factory,
+                           params=params)
+        sim = ClusterSimulator(
+            fleet, EWSJFRouter(cost=cost), cost,
+            prefix_directory=PrefixDirectory() if directory else None)
+        return sim.run(copy.deepcopy(workload or self._workload()))
+
+    def test_prefix_aware_beats_blind(self):
+        blind = self._run(False)
+        aware = self._run(True, directory=True)
+        assert len(aware.finished) == len(blind.finished)
+        b = blind.ttft_stats()["short"]["mean"]
+        a = aware.ttft_stats()["short"]["mean"]
+        assert a < 0.75 * b                   # ≥25% short-TTFT gain
+        assert aware.tok_per_s >= 0.95 * blind.tok_per_s
+        assert aware.prefix["saved_tokens"] > 0
+        assert aware.prefix["directory"]["merges"] > 0
+
+    def test_router_steers_to_prefix_holder(self):
+        cost = cost_model()
+        params = ReplicaParams(enable_prefix_cache=True)
+        fleet = make_fleet(4, cost, scheduler_factory=ewsjf_factory,
+                           params=params)
+        directory = PrefixDirectory()
+        router = EWSJFRouter(cost=cost)
+        ClusterSimulator(fleet, router, cost, prefix_directory=directory)
+        hashes = chain(128)
+        # replica 2 holds the prefix and advertises it
+        fleet[2].radix.insert(hashes, now=0.0)
+        directory.publish(2, fleet[2].prefix_adverts(), now=0.0)
+        directory.merge(0.0)
+        req = Request(prompt_len=2100, arrival_time=0.0,
+                      prompt_hashes=hashes + chain(4, seed=9))
+        picked = router.select(fleet, req, now=0.0)
+        assert picked.replica_id == 2
+        assert req.cached_len >= 2000
+        # a different replica would have planned a remote fetch
+        req2 = Request(prompt_len=2100, arrival_time=0.0,
+                       prompt_hashes=hashes + chain(4, seed=10))
+        router._annotate_prefix(fleet[0], req2)
+        assert req2.prefix_fetch is not None
+        assert req2.prefix_fetch.src_replica == 2
+
+    def test_remote_fetch_avoids_full_pools(self):
+        cost = cost_model()
+        params = ReplicaParams(enable_prefix_cache=True)
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory,
+                           params=params)
+        directory = PrefixDirectory()
+        router = EWSJFRouter(cost=cost)
+        ClusterSimulator(fleet, router, cost, prefix_directory=directory)
+        hashes = chain(64)
+        fleet[1].radix.insert(hashes, now=0.0)
+        directory.publish(1, fleet[1].prefix_adverts(), now=0.0)
+        directory.merge(0.0)
+        fleet[0].kv_ewma = 0.95               # near exhaustion (smoothed)
+        req = Request(prompt_len=1100, arrival_time=0.0,
+                      prompt_hashes=hashes + chain(2, seed=5))
+        router._annotate_prefix(fleet[0], req)
+        assert req.prefix_fetch is None       # no fetch into a full pool
+
+    def test_directory_forgets_failed_replica(self):
+        cost = cost_model()
+        params = ReplicaParams(enable_prefix_cache=True)
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory,
+                           params=params)
+        directory = PrefixDirectory()
+        sim = ClusterSimulator(fleet, EWSJFRouter(cost=cost), cost,
+                               prefix_directory=directory)
+        hashes = chain(16)
+        fleet[1].radix.insert(hashes, now=0.0)
+        directory.publish(1, fleet[1].prefix_adverts(), now=0.0)
+        directory.merge(0.0)
+        assert directory.lookup(hashes)
+        sim._handle_failure(fleet[1])
+        assert 1 not in directory.lookup(hashes)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: KV plane off ⇒ bit-identical to pre-KV-plane behavior
+# ---------------------------------------------------------------------------
+
+class TestEquivalence:
+    def test_disabled_cache_is_bit_identical(self):
+        """Requests *with* hash chains through a cache-disabled fleet behave
+        exactly like the same requests with no hashes at all: same routing
+        decisions, same TTFTs, same finish times."""
+        cost = cost_model()
+        wl = self._mixed_workload()
+        bare = copy.deepcopy(wl)
+        for r in bare:
+            r.prompt_hashes = None
+
+        res_hashed = self._run(cost, wl)
+        res_bare = self._run(cost, bare)
+        for a, b in zip(self._by_id(res_hashed), self._by_id(res_bare)):
+            assert a[0] == b[0]
+            assert a[1] == pytest.approx(b[1], abs=0.0)   # ttft identical
+            assert a[2] == pytest.approx(b[2], abs=0.0)   # finish identical
+        assert res_hashed.prefix == {} and res_bare.prefix == {}
+
+    def test_route_cost_identical_without_kvplane(self):
+        cost = cost_model()
+        fleet = make_fleet(3, cost, scheduler_factory=ewsjf_factory)
+        wl = WorkloadSpec(n_requests=60, arrival_rate=1e3, seed=4).generate()
+        for i, r in enumerate(wl):
+            fleet[i % 3].submit(r, r.arrival_time)
+        plain = EWSJFRouter(cost=cost)
+        kv = EWSJFRouter(cost=cost)      # no directory/topology, no radixes
+        probe = Request(prompt_len=777, arrival_time=1.0,
+                        prompt_hashes=chain(48))
+        for rep in fleet:
+            assert kv.route_cost(rep, probe, 1.0) == \
+                plain.route_cost(rep, probe, 1.0)
+
+    @staticmethod
+    def _mixed_workload():
+        spec = SharedPrefixWorkloadSpec(n_sessions=8, turns_per_session=3,
+                                        session_rate=4.0, seed=5)
+        bg = WorkloadSpec(n_requests=30, arrival_rate=8.0, seed=6).generate()
+        return agentic_mix(spec, bg)
+
+    @staticmethod
+    def _run(cost, wl):
+        fleet = make_fleet(3, cost, scheduler_factory=ewsjf_factory)
+        sim = ClusterSimulator(fleet, EWSJFRouter(cost=cost), cost)
+        return sim.run(wl)
+
+    @staticmethod
+    def _by_id(res):
+        return sorted(((r.request_id % 10 ** 6, r.ttft, r.finish_time)
+                       for r in res.finished), key=lambda t: t[0])
+
+
+# ---------------------------------------------------------------------------
+# Satellites: per-replica admission shares + KV health telemetry
+# ---------------------------------------------------------------------------
+
+class TestPerReplicaAdmission:
+    def test_shares_follow_measured_rates(self):
+        ctl = AdmissionController(config=AdmissionConfig(
+            token_budget_per_s=1000.0, per_replica_shares=True))
+        ctl.set_replica_rates({0: 300.0, 1: 100.0})
+        st = ctl.stats()
+        assert st["replica_shares"][0] == pytest.approx(0.75)
+        assert st["replica_shares"][1] == pytest.approx(0.25)
+
+    def test_replica_bucket_denies_before_fleet_bucket(self):
+        ctl = AdmissionController(config=AdmissionConfig(
+            token_budget_per_s=7000.0, per_replica_shares=True,
+            saturation_delay=0.0))
+        # batch class gets weight 1/7 of 7000 = 1000 tok/s
+        ctl.set_replica_rates({0: 900.0, 1: 100.0})
+        big = Request(prompt_len=300, max_new_tokens=10, arrival_time=0.0)
+        big.priority_class = 3                 # batch: sheddable
+        # replica 1's slice (~10% of the batch-class bucket) can't take it,
+        # replica 0's can
+        d1 = ctl.admit(copy.deepcopy(big), 0.0, est_delay=10.0, replica_id=1)
+        d0 = ctl.admit(copy.deepcopy(big), 0.0, est_delay=10.0, replica_id=0)
+        assert not d1.admitted and d0.admitted
+        assert ctl.stats()["replica_denied"].get(1, 0) == 1
+
+    def test_cluster_wires_replica_rates(self):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory)
+        adm = AdmissionController(config=AdmissionConfig(
+            token_budget_per_s=1e6, per_replica_shares=True))
+        sim = ClusterSimulator(fleet, EWSJFRouter(cost=cost), cost,
+                               admission=adm)
+        wl = WorkloadSpec(n_requests=60, arrival_rate=20.0, seed=7).generate()
+        res = sim.run(copy.deepcopy(wl))
+        assert len(res.finished) > 0
+        assert res.admission["replica_shares"]   # shares were installed
+
+
+class TestKVHealth:
+    def test_monitor_smooths_and_exposes_occupancy(self):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory,
+                           params=ReplicaParams(kv_pool_tokens=4096))
+        mon = HealthMonitor()
+        fleet[0].pool.allocate(1, 2048)
+        mon.observe_kv(fleet)
+        assert fleet[0].kv_ewma > 0.0
+        assert mon.kv_stats()["peak"][0] >= 0.5
+        fleet[0].pool.free(1)
+        for _ in range(20):
+            mon.observe_kv(fleet)
+        assert fleet[0].kv_ewma < 0.05         # EWMA decays after release
+
+    def test_cluster_result_surfaces_kv(self):
+        cost = cost_model()
+        params = ReplicaParams(enable_prefix_cache=True)
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory,
+                           params=params)
+        sim = ClusterSimulator(fleet, EWSJFRouter(cost=cost), cost)
+        wl = SharedPrefixWorkloadSpec(n_sessions=4, turns_per_session=2,
+                                      seed=8).generate()
+        res = sim.run(copy.deepcopy(wl))
+        assert "kv" in res.prefix
+        assert set(res.prefix["caches"]) == {0, 1}
