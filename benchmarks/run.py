@@ -40,9 +40,10 @@ def main(argv=None) -> None:
 
     from . import (bench_cluster_routing, bench_kernels, bench_meta_optimizer,
                    bench_padding, bench_policy_store, bench_prefix_cache,
-                   bench_scheduler_overhead, bench_table3_queue_count,
-                   bench_table10_summary, bench_tables4to7_load,
-                   bench_tables8to9_regimes, bench_ttft_starvation)
+                   bench_role_autoscaler, bench_scheduler_overhead,
+                   bench_table3_queue_count, bench_table10_summary,
+                   bench_tables4to7_load, bench_tables8to9_regimes,
+                   bench_ttft_starvation)
     sections = [
         ("table3_queue_count", "Table 3 (queue count)",
          bench_table3_queue_count.main),
@@ -64,6 +65,8 @@ def main(argv=None) -> None:
          lambda: bench_policy_store.main(quick=args.quick)),
         ("prefix_cache", "Prefix-reuse KV plane (beyond-paper)",
          lambda: bench_prefix_cache.main(quick=args.quick)),
+        ("role_autoscaler", "Role-aware disagg autoscaling (beyond-paper)",
+         lambda: bench_role_autoscaler.main(quick=args.quick)),
         ("kernels", "Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()

@@ -14,8 +14,8 @@ sys.path.insert(0, "src")
 from repro.cluster import (AdmissionConfig, AdmissionController,
                            AutoscalerConfig, ClusterSimulator, PolicyStore,
                            PolicyStoreConfig, PrefixDirectory, ReplicaParams,
-                           ScenarioEvent, SLOBurnAutoscaler, make_fleet,
-                           make_router)
+                           RolePoolConfig, ScenarioEvent, SLOBurnAutoscaler,
+                           make_fleet, make_router)
 from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, WorkloadSpec
 from repro.kvplane import SharedPrefixWorkloadSpec, agentic_mix
 
@@ -94,7 +94,7 @@ def main() -> None:
           f"{res.autoscale['scale_downs']} downs | "
           f"readmitted {res.readmitted} | "
           f"final burn {{{', '.join(f'{k}={v:.2f}' for k, v in res.autoscale['burn'].items())}}}")
-    for t, action, rid in res.autoscale["events"]:
+    for t, action, rid, _role in res.autoscale["events"]:
         print(f"   t={t:6.2f}s scale-{action} (replica {rid})")
 
     print("\n== scenario 4: fleet strategic plane (shared policy store, "
@@ -146,6 +146,37 @@ def main() -> None:
                      f"prefixes")
         print(f"   {label:24s} short TTFT {st['short']['mean'] * 1e3:7.1f} ms"
               f" | {res.tok_per_s:6.1f} tok/s{extra}")
+
+    print("\n== scenario 6: role-aware autoscaling on a disaggregated "
+          "fleet (prefill burst)")
+    burst = WorkloadSpec(n_requests=240, arrival_rate=40.0,
+                         short_range=(32, 256), seed=7).generate()
+    tail = WorkloadSpec(n_requests=80, arrival_rate=5.0, seed=8).generate()
+    t0 = burst[-1].arrival_time
+    for r in tail:
+        r.arrival_time += t0
+    pools = (RolePoolConfig(role="prefill", max_replicas=5, up_patience=1,
+                            cooldown_up=0.75),
+             RolePoolConfig(role="decode", max_replicas=5, up_patience=1,
+                            cooldown_up=0.75))
+    autoscaler = SLOBurnAutoscaler(
+        scheduler_factory=scheduler_factory,
+        cfg=AutoscalerConfig(pools=pools, fleet_max_replicas=8))
+    fleet = make_fleet(2, cost, scheduler_factory=scheduler_factory,
+                       roles=["prefill", "decode"])
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           autoscaler=autoscaler)
+    res = sim.run(burst + tail)
+    print_result(res)
+    by_role = res.autoscale["by_role"]
+    print(f"   role-aware autoscale: "
+          + ", ".join(f"{role}: +{v['ups']}/-{v['downs']}"
+                      for role, v in sorted(by_role.items()))
+          + f" | decode burn {res.autoscale['decode_burn']:.2f} "
+          f"(prefill-side burst ⇒ only the prefill pool should grow)")
+    print(f"   replica-seconds consumed: {res.replica_seconds:.1f}")
+    for t, action, rid, role in res.autoscale["events"]:
+        print(f"   t={t:6.2f}s scale-{action} ({role} replica {rid})")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,8 @@ from ..kvplane import (LinkTopology, LinkTopologyConfig, PrefixDirectory,
 from .admission import (DEFAULT_SLO_CLASSES, AdmissionConfig,
                         AdmissionController, AdmissionDecision, SLOClass,
                         classify_by_length)
-from .autoscaler import AutoscalerConfig, ScaleEvent, SLOBurnAutoscaler
+from .autoscaler import (AutoscalerConfig, RolePoolConfig, ScaleEvent,
+                         SLOBurnAutoscaler)
 from .disagg import HandoffChannel, KVHandoff
 from .health import HealthConfig, HealthMonitor
 from .policy_store import (GlobalPolicy, PolicyStore, PolicyStoreConfig,
@@ -50,7 +51,7 @@ def make_fleet(n: int, cost: CostModel,
 __all__ = [
     "AdmissionConfig", "AdmissionController", "AdmissionDecision", "SLOClass",
     "DEFAULT_SLO_CLASSES", "classify_by_length",
-    "AutoscalerConfig", "ScaleEvent", "SLOBurnAutoscaler",
+    "AutoscalerConfig", "RolePoolConfig", "ScaleEvent", "SLOBurnAutoscaler",
     "HandoffChannel", "KVHandoff",
     "HealthConfig", "HealthMonitor",
     "GlobalPolicy", "PolicyStore", "PolicyStoreConfig", "ReplicaObservation",

@@ -40,6 +40,8 @@ from ..core.types import Request, RequestState
 
 @dataclass(frozen=True)
 class SLOClass:
+    """One admission service class: TTFT budget, queueing deadline,
+    shed priority, and fair-share weight."""
     name: str
     ttft_target: float          # seconds; admission budget for first token
     deadline: Optional[float]   # max queueing age before drop (None = never)
@@ -103,6 +105,7 @@ class AdmissionConfig:
 
 @dataclass
 class AdmissionDecision:
+    """Outcome of one ``admit`` call (reason: ok/shed/defer/budget)."""
     admitted: bool
     slo: SLOClass
     reason: str = "ok"
@@ -170,9 +173,16 @@ class AdmissionController:
 
     def set_replica_rates(self, rates: dict[int, float]) -> None:
         """Per-replica budget shares: split every class's refill across
-        replicas proportional to their measured token-output EWMAs (the
-        HealthMonitor's ``replica_rate``).  Replicas that disappeared drop
-        their sub-buckets; new ones start at their share's burst cap."""
+        replicas proportional to their measured rate EWMAs.  The caller
+        decides who participates and with which signal — the cluster
+        simulator passes *prefill-capable* replicas only (admission hints
+        always name one), rated by output-token EWMA for unified replicas
+        and prefill-token EWMA for prefill-role ones, so a disaggregated
+        pool's shares track demonstrated prefill capacity instead of
+        handing budget to decode replicas whose buckets no admission check
+        reads (``ClusterSimulator._admission_share_rates``).  Replicas that
+        disappeared drop their sub-buckets; new ones start at their share's
+        burst cap."""
         if not self.cfg.per_replica_shares:
             return
         positive = [r for r in rates.values() if r > 0]
@@ -222,6 +232,7 @@ class AdmissionController:
             self.set_replica_rates(self._rep_share)
 
     def slo_of(self, req: Request) -> SLOClass:
+        """The SLO class this request is admitted (and budgeted) under."""
         return self.classes[self._classify(req)]
 
     # ---- per-class token budgets -----------------------------------------
@@ -246,6 +257,7 @@ class AdmissionController:
                                          self._rep_buckets[key] + rate * dt)
 
     def budget_remaining(self, class_name: str) -> float:
+        """Current token-bucket level for a class (0.0 when budgets are off)."""
         return self._buckets.get(class_name, 0.0)
 
     # ---- arrival / retry path --------------------------------------------
@@ -322,9 +334,11 @@ class AdmissionController:
     # ---- re-admission queue ----------------------------------------------
 
     def retry_pending(self) -> int:
+        """Number of deferred requests parked in the re-admission queue."""
         return len(self._retry_q)
 
     def next_retry_time(self) -> Optional[float]:
+        """Earliest backoff expiry in the retry queue (None when empty)."""
         if not self._retry_q:
             return None
         return min(e.next_attempt for e in self._retry_q)
@@ -363,6 +377,7 @@ class AdmissionController:
         return False
 
     def stats(self) -> dict:
+        """Counter snapshot (admitted/shed/dropped/deferred/... per class)."""
         return {"admitted": dict(self.admitted), "shed": dict(self.shed),
                 "dropped": dict(self.dropped),
                 "deferred": dict(self.deferred),

@@ -47,6 +47,8 @@ class HandoffChannel:
     total_transfer_time: float = 0.0
 
     def send(self, handoff: KVHandoff, now: float, dst_replica: int) -> KVHandoff:
+        """Charge one KV transfer against the serialized channel; returns the
+        handoff stamped with its destination arrival time."""
         start = max(now, self.busy_until)
         xfer = self.latency + handoff.kv_bytes / max(self.bandwidth, 1.0)
         self.busy_until = start + xfer
@@ -59,6 +61,7 @@ class HandoffChannel:
         return handoff
 
     def stats(self) -> dict:
+        """Aggregate handoff accounting (count, bytes, transfer seconds)."""
         return {"handoffs": self.handoffs,
                 "total_gb": self.total_bytes / 1e9,
                 "total_transfer_s": self.total_transfer_time,

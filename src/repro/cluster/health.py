@@ -20,6 +20,7 @@ from .replica import ReplicaModel
 
 @dataclass
 class HealthConfig:
+    """Detection thresholds + telemetry smoothing factors."""
     heartbeat_timeout: float = 5.0
     straggler_factor: float = 3.0
     check_interval: float = 1.0
@@ -28,6 +29,8 @@ class HealthConfig:
 
 
 class HealthMonitor:
+    """Heartbeat/straggler detector and the control plane's telemetry tap
+    (throughput, KV occupancy, queue-delay and decode-pressure samples)."""
     def __init__(self, cfg: HealthConfig | None = None):
         self.cfg = cfg or HealthConfig()
         self.failures: list[int] = []
@@ -40,8 +43,15 @@ class HealthMonitor:
         # refill is proportional to its measured output rate).
         self.tok_rate_ewma = 0.0
         self.replica_rate: dict[int, float] = {}
+        # Per-replica *prefill*-token rate EWMAs (``tokens_in``): the
+        # capacity signal for prefill-role replicas in a disaggregated
+        # fleet, whose ``tokens_out`` stays ~0 because their handoffs
+        # finish on a decode replica.  Feeds the role-aware admission
+        # budget-share split (see ClusterSimulator._admission_share_rates).
+        self.replica_prefill_rate: dict[int, float] = {}
         self._tok_seen = 0
         self._rep_seen: dict[int, int] = {}
+        self._rep_in_seen: dict[int, int] = {}
         self._tok_t: float | None = None
         # Smoothed per-replica KV occupancy (+ high-water mark): surfaced
         # to the router via ``ReplicaModel.kv_ewma`` so prefix-aware
@@ -50,6 +60,7 @@ class HealthMonitor:
         self.kv_peak: dict[int, float] = {}
 
     def due(self, now: float) -> bool:
+        """Whether a check interval elapsed since the last health round."""
         return now - self._last_check >= self.cfg.check_interval
 
     def observe_throughput(self, replicas: Iterable[ReplicaModel],
@@ -62,6 +73,7 @@ class HealthMonitor:
         if self._tok_t is None:
             self._tok_seen, self._tok_t = total, now
             self._rep_seen = {r.replica_id: r.tokens_out for r in replicas}
+            self._rep_in_seen = {r.replica_id: r.tokens_in for r in replicas}
             return self.tok_rate_ewma
         dt = now - self._tok_t
         if dt <= 0:
@@ -81,10 +93,17 @@ class HealthMonitor:
             self.replica_rate[r.replica_id] = (rr if prev <= 0
                                                else (1 - a) * prev + a * rr)
             self._rep_seen[r.replica_id] = r.tokens_out
+            ri = (r.tokens_in - self._rep_in_seen.get(r.replica_id, 0)) / dt
+            prev_in = self.replica_prefill_rate.get(r.replica_id, 0.0)
+            self.replica_prefill_rate[r.replica_id] = (
+                ri if prev_in <= 0 else (1 - a) * prev_in + a * ri)
+            self._rep_in_seen[r.replica_id] = r.tokens_in
         for rid in list(self.replica_rate):
             if rid not in live:
                 self.replica_rate.pop(rid, None)
                 self._rep_seen.pop(rid, None)
+                self.replica_prefill_rate.pop(rid, None)
+                self._rep_in_seen.pop(rid, None)
         self._tok_seen, self._tok_t = total, now
         return self.tok_rate_ewma
 
@@ -112,6 +131,7 @@ class HealthMonitor:
         return self.kv_ewma
 
     def kv_stats(self) -> dict:
+        """Smoothed + peak per-replica KV occupancy (for result reporting)."""
         return {"ewma": dict(self.kv_ewma), "peak": dict(self.kv_peak)}
 
     def check(self, replicas: Iterable[ReplicaModel], now: float
@@ -165,4 +185,27 @@ class HealthMonitor:
                 for q in snap.queues:
                     if q.depth and q.head_len is not None:
                         samples.append((q.head_len, 0, q.head_wait))
+        return samples
+
+    def decode_samples(self, replicas: Iterable[ReplicaModel]
+                       ) -> list[tuple[float, float, float]]:
+        """Decode-side pressure observations as ``(tbt_ewma, kv_occupancy,
+        inbox_ratio)`` triples, one per live decode-capable replica.  The
+        triple captures the three ways a decode pool saturates: inter-token
+        delay rising (batch/KV-bound step time), the smoothed KV-pool
+        occupancy approaching exhaustion (eviction churn imminent), and
+        handoffs queueing in the inbox faster than slots free up.  Feeds
+        the role-aware autoscaler's decode burn signal
+        (``SLOBurnAutoscaler.ingest_decode``)."""
+        samples: list[tuple[float, float, float]] = []
+        for rep in replicas:
+            if not rep.alive or not rep.accepts_decode():
+                continue
+            occ = self.kv_ewma.get(rep.replica_id, rep.kv_occupancy())
+            inbox_ratio = len(rep.inbox) / max(rep.p.max_num_seqs, 1)
+            # tbt_ewma only updates while decode steps run, so an idle
+            # batch would report its burst-time peak forever; no running
+            # sequences ⇒ no inter-token pressure, by definition.
+            tbt = rep.tbt_ewma if rep.inflight() else 0.0
+            samples.append((tbt, occ, inbox_ratio))
         return samples

@@ -48,6 +48,8 @@ from ..core.types import MetaParams, QueueBounds
 
 @dataclass
 class PolicyStoreConfig:
+    """Sync cadence, staleness window, merge caps, and the per-replica
+    ``local_adaptation`` blend weight."""
     sync_interval: float = 5.0       # publish→merge→broadcast period (s)
     local_adaptation: float = 0.25   # w: how much local structure replicas keep
     min_fleet_samples: int = 64      # don't emit a policy before this
@@ -120,6 +122,7 @@ class PolicyStore:
     # ---- sync-loop cadence -------------------------------------------------
 
     def due(self, now: float) -> bool:
+        """Whether a merge round is owed on the store-wide cadence."""
         return now - self._last_sync >= self.cfg.sync_interval
 
     def issue_party_key(self) -> int:
@@ -396,6 +399,7 @@ class PolicyStore:
     # ---- read side ---------------------------------------------------------
 
     def current(self) -> Optional[GlobalPolicy]:
+        """The latest merged global policy (None before the first merge)."""
         return self._policy
 
     def global_bounds(self, length: float) -> Optional[QueueBounds]:
@@ -410,6 +414,7 @@ class PolicyStore:
         return self._policy.boundaries[-1]
 
     def stats(self) -> dict:
+        """Store telemetry: epoch, queue/trial counts, merge/publish totals."""
         pol = self._policy
         return {"epoch": pol.epoch if pol else 0,
                 "merges": self.merges,

@@ -49,6 +49,8 @@ from .disagg import KVHandoff
 
 @dataclass
 class ReplicaParams:
+    """Executor sizing: decode slots, prefill budget, paged-KV pool, and
+    the optional prefix-cache tenancy knobs."""
     max_num_seqs: int = 64              # decode slots
     max_prefill_tokens: int = 8192      # chunked-prefill budget per tick
     kv_pool_tokens: int = 131072        # paged-KV pool capacity
@@ -63,6 +65,7 @@ class ReplicaParams:
 
     @property
     def total_blocks(self) -> int:
+        """Paged-KV pool capacity in blocks."""
         return self.kv_pool_tokens // self.block_size
 
 
@@ -124,6 +127,18 @@ class ReplicaModel:
         self.busy_time = 0.0
         self.tokens_out = 0          # cumulative generated tokens (throughput
                                      # telemetry for the health monitor EWMA)
+        self.tokens_in = 0           # cumulative prefill suffix tokens — the
+                                     # capacity signal for a *prefill*-role
+                                     # replica, whose tokens_out stays ~0
+                                     # because handoffs finish downstream
+        self.tbt_ewma = 0.0          # smoothed inter-token delay (decode-side
+                                     # burn signal for the autoscaler)
+        # Lifetime stamps for replica-seconds accounting (cost of capacity):
+        # ``born`` is set by ClusterSimulator.add_replica for scale-ups;
+        # ``died`` is stamped when the replica leaves the fleet (fail / drain
+        # completion).  None = still alive at end of run.
+        self.born = 0.0
+        self.died: Optional[float] = None
         self.prefix_saved_tokens = 0          # prefill tokens skipped via cache
         self.kv_ewma = 0.0           # smoothed occupancy (health monitor)
         # Queue-delay observations (arrival→prefill-dispatch wait) consumed
@@ -134,26 +149,33 @@ class ReplicaModel:
     # ---- routing-facing introspection -----------------------------------
 
     @property
-    def pod_id(self) -> int:                 # legacy name (distributed API)
+    def pod_id(self) -> int:
+        """Legacy alias for ``replica_id`` (distributed API)."""
         return self.replica_id
 
     @property
     def free_blocks(self) -> int:
+        """Unallocated blocks in the paged-KV pool."""
         return self.pool.free_blocks
 
     def schedulable(self) -> bool:
+        """Alive and not draining: a valid routing target."""
         return self.alive and not self.draining
 
     def accepts_prefill(self) -> bool:
+        """Schedulable and prefill-capable (role unified or prefill)."""
         return self.schedulable() and self.role in ("unified", "prefill")
 
     def accepts_decode(self) -> bool:
+        """Schedulable and decode-capable (role unified or decode)."""
         return self.schedulable() and self.role in ("unified", "decode")
 
     def kv_occupancy(self) -> float:
+        """Instantaneous paged-KV pool utilization in [0, 1]."""
         return self.pool.utilization
 
     def inflight(self) -> int:
+        """Size of the running decode batch."""
         return len(self.running)
 
     def prefix_probe(self, hashes) -> int:
@@ -198,15 +220,18 @@ class ReplicaModel:
         return (queued + decode + pend) / max(self.speed, 1e-6)
 
     def has_work(self) -> bool:
+        """Anything running, queued, or pending in the handoff inbox."""
         return bool(self.running or self.inbox
                     or (self.role != "decode" and self.sched.waiting()))
 
     # ---- request path ----------------------------------------------------
 
     def submit(self, req: Request, now: float) -> None:
+        """Enqueue a routed request into the local scheduler."""
         self.sched.submit(req, now)
 
     def accept_handoff(self, handoff: KVHandoff, now: float) -> None:
+        """Receive a KV handoff (decode admission happens at the next tick)."""
         self.inbox.append(handoff)
 
     # ---- failure / drain --------------------------------------------------
@@ -274,6 +299,8 @@ class ReplicaModel:
         self.last_heartbeat = now + dt
         if self.draining and not self.has_work():
             self.alive = False
+            if self.died is None:
+                self.died = now + dt
         return dt
 
     def _blocks_for(self, tokens: int) -> int:
@@ -385,6 +412,7 @@ class ReplicaModel:
         # only the dense/suffix charge shrinks with reuse.
         mean_ctx = (sum(int(r.prompt_len) for r in plan.requests)
                     / len(plan.requests))
+        self.tokens_in += suffix_tokens
         dt = (self.cost.prefill_step_time(padded, mean_ctx) + exposed_fetch) \
             / max(self.speed, 1e-6)
         end = now + dt
@@ -442,6 +470,11 @@ class ReplicaModel:
             step = self.cost.decode_step_time(len(self.running),
                                               total_kv) / max(self.speed, 1e-6)
             dt += step
+            # Inter-token delay: one decode step emits one token for every
+            # running sequence, so ``step`` *is* the batch's TBT this round.
+            a = 0.2
+            self.tbt_ewma = ((1 - a) * self.tbt_ewma + a * step
+                             if self.tbt_ewma else step)
             done = []
             for i, rr in enumerate(self.running):
                 if rr.kv_tokens % self.p.block_size == 0:

@@ -37,28 +37,35 @@ class Router:
 
     def select(self, replicas: Sequence[ReplicaModel], req,
                now: float) -> Optional[ReplicaModel]:
+        """Pick a prefill-capable replica for ``req`` (None = no capacity)."""
         raise NotImplementedError
 
     def select_decode(self, replicas: Sequence[ReplicaModel], handoff,
                       now: float) -> Optional[ReplicaModel]:
         """Decode-pool placement for a handoff: least KV-pressure, then
-        least in-flight (shared by all policies — decode placement is a
-        memory-balancing problem, not a queueing one)."""
+        least in-flight per unit speed (shared by all policies — decode
+        placement is a memory-balancing problem, not a queueing one).  The
+        speed normalization matters once pools are asymmetric: a role-aware
+        scale-up may add decode replicas at a different speed tier, and raw
+        in-flight counts would keep loading the slow ones."""
         pool = [r for r in replicas if r.accepts_decode()]
         if not pool:
             return None
         return min(pool, key=lambda r: (r.kv_occupancy(),
-                                        r.inflight() + len(r.inbox),
+                                        (r.inflight() + len(r.inbox))
+                                        / max(r.speed, 1e-6),
                                         r.replica_id))
 
 
 class RoundRobinRouter(Router):
+    """Cycles over schedulable replicas — backlog- and speed-blind."""
     name = "round_robin"
 
     def __init__(self):
         self._i = 0
 
     def select(self, replicas, req, now):
+        """Next prefill-capable replica in cyclic order."""
         pool = [r for r in replicas if r.accepts_prefill()]
         if not pool:
             return None
@@ -68,9 +75,11 @@ class RoundRobinRouter(Router):
 
 
 class LeastLoadedRouter(Router):
+    """Join-the-shortest-queue on a coarse speed-scaled work estimate."""
     name = "least_loaded"
 
     def select(self, replicas, req, now):
+        """Replica with the least queued + residual work per unit speed."""
         pool = [r for r in replicas if r.accepts_prefill()]
         if not pool:
             return None
@@ -130,6 +139,8 @@ class EWSJFRouter(Router):
         self._work_memo: dict[int, tuple[int, dict[int, tuple[float, float]]]] = {}
 
     def select(self, replicas, req, now):
+        """Minimum marginal-start-delay replica (see ``route_cost``); stamps
+        the winner's prefix-reuse plan onto the request."""
         pool = [r for r in replicas if r.accepts_prefill()]
         if not pool:
             return None
@@ -303,8 +314,17 @@ class EWSJFRouter(Router):
             max(replica.inflight(), 1),
             max(replica.inflight(), 1) * max(L, 1.0))
 
+        # 3b) Disaggregated backlog: handoffs parked in a prefill replica's
+        #     outbox are finished prefills the decode pool could not absorb
+        #     (it drained away or stalled) — more prefill routed here joins
+        #     a pipeline that is not moving, so each parked handoff charges
+        #     the decode admission *its own* KV context is waiting on.
+        #     Empty outbox (the steady state, and every unified fleet) ⇒ 0.0.
+        stalled = sum(self.cost.decode_step_time(1, h.kv_tokens)
+                      for h in replica.outbox)
+
         delay = (ahead + contention) / max(replica.speed, 1e-6) + resid \
-            + decode_drag
+            + decode_drag + stalled
         # 4) KV pressure penalty: a nearly-full pool means admission stalls
         #    and preemption churn.
         occ = replica.kv_occupancy()
@@ -322,6 +342,7 @@ class EWSJFRouter(Router):
 
 
 def make_router(name: str, cost: CostModel | None = None, **kw) -> Router:
+    """Router factory by short name: round_robin / least_loaded / ewsjf."""
     if name in ("rr", "round_robin"):
         return RoundRobinRouter()
     if name in ("ll", "least_loaded"):

@@ -56,6 +56,8 @@ class ScenarioEvent:
 
 @dataclass
 class ClusterSimResult:
+    """Everything a cluster run produced: per-request outcomes, per-plane
+    stats, and the derived TTFT/throughput/capacity metrics."""
     total_time: float
     finished: list[Request]
     shed: list[Request]
@@ -72,14 +74,26 @@ class ClusterSimResult:
 
     @property
     def req_per_s(self) -> float:
+        """Finished requests per simulated second."""
         return len(self.finished) / max(self.total_time, 1e-9)
 
     @property
     def tok_per_s(self) -> float:
+        """Generated tokens per simulated second (the equal-throughput guard)."""
         toks = sum(r.generated for r in self.finished)
         return toks / max(self.total_time, 1e-9)
 
+    @property
+    def replica_seconds(self) -> float:
+        """Total capacity consumed: Σ per-replica (death − birth), with the
+        run end standing in for still-alive replicas.  The denominator of
+        the role-aware autoscaling claim (same SLO recovery, less
+        capacity)."""
+        return sum(s.get("replica_seconds", 0.0) for s in self.replica_stats)
+
     def ttft_stats(self, short_threshold: int = 256) -> dict:
+        """TTFT mean/percentiles over all finished requests, split
+        short/long at ``short_threshold`` prompt tokens."""
         def s(a):
             if not len(a):
                 return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
@@ -110,6 +124,8 @@ class ClusterSimResult:
 
 
 class ClusterSimulator:
+    """Discrete-event loop over a replica fleet: admission, routing,
+    health, handoffs, autoscaling, policy/prefix sync, engine ticks."""
     def __init__(self, replicas: Sequence[ReplicaModel], router: Router,
                  cost: CostModel,
                  admission: Optional[AdmissionController] = None,
@@ -167,9 +183,12 @@ class ClusterSimulator:
     def add_replica(self, scheduler: BaseScheduler, role: str = "unified",
                     speed: float = 1.0,
                     params: ReplicaParams | None = None) -> ReplicaModel:
+        """Join a new replica (scale-up path, warm-started when a policy
+        store is wired).  Stamps ``born`` for replica-seconds accounting."""
         rid = 1 + max((r.replica_id for r in self.replicas), default=-1)
         rep = ReplicaModel(rid, self.cost, scheduler=scheduler, params=params,
                            role=role, speed=speed)
+        rep.born = self.now
         rep.last_heartbeat = self.now
         rep.topology = self.topology
         rep.peer_alive_fn = self._peer_alive
@@ -185,6 +204,7 @@ class ClusterSimulator:
         return rep
 
     def replica(self, replica_id: int) -> ReplicaModel:
+        """Lookup by replica id (raises StopIteration if absent)."""
         return next(r for r in self.replicas if r.replica_id == replica_id)
 
     # ---- ingestion --------------------------------------------------------
@@ -274,6 +294,8 @@ class ClusterSimulator:
             self.policy_store.forget(rep.replica_id)
         if self.prefix_directory is not None:
             self.prefix_directory.forget(rep.replica_id)
+        if rep.died is None:
+            rep.died = self.now
         for req in rep.fail():
             self.reenqueued += 1
             self._route(req)
@@ -285,6 +307,8 @@ class ClusterSimulator:
             self.prefix_directory.forget(rep.replica_id)
         for req in rep.start_drain():
             self._route(req)
+        if not rep.alive and rep.died is None:
+            rep.died = self.now      # idle drain completes immediately
 
     def _prefix_sync(self, now: float) -> None:
         """One KV-plane directory round: every live caching replica
@@ -323,8 +347,30 @@ class ClusterSimulator:
 
     def _autoscale_tick(self, now: float) -> None:
         """One reactive-control round: fold the health monitor's queue-delay
-        samples into per-class burn, then apply at most one scale action."""
+        samples into per-class burn (and, role-aware, its decode-pressure
+        samples into decode burn), then apply the scale decisions — one per
+        pool in role-aware mode, at most one total otherwise.  The delay
+        samples are *drained* from the replicas' dispatch logs here, so a
+        policy-sync round sharing this event-loop iteration can never feed
+        the same observation into burn twice."""
         self.autoscaler.ingest(self.monitor.delay_samples(self.replicas, now))
+        if self.autoscaler.role_aware:
+            self.autoscaler.ingest_decode(
+                self.monitor.decode_samples(self.replicas))
+            for act, pool in self.autoscaler.decide_roles(self.replicas, now):
+                if act == "up":
+                    rep = self.add_replica(self.autoscaler.make_scheduler(now),
+                                           role=pool.role, speed=pool.speed)
+                    self.autoscaler.note_scaled("up", rep, now,
+                                                role=pool.role)
+                else:
+                    victim = self.autoscaler.drain_candidate(self.replicas,
+                                                             pool=pool)
+                    if victim is not None:
+                        self._handle_drain(victim)
+                        self.autoscaler.note_scaled("down", victim, now,
+                                                    role=pool.role)
+            return
         act = self.autoscaler.decide(self.replicas, now)
         if act == "up":
             rep = self.add_replica(self.autoscaler.make_scheduler(now),
@@ -336,6 +382,30 @@ class ClusterSimulator:
             if victim is not None:
                 self._handle_drain(victim)
                 self.autoscaler.note_scaled("down", victim, now)
+
+    def _admission_share_rates(self) -> dict[int, float]:
+        """Per-replica rate signal for the admission budget-share split,
+        restricted to routing targets.  Admission hints always name a
+        *prefill-capable* replica, so in a disaggregated fleet the shares
+        must be split across the prefill pool only — splitting across all
+        replicas hands most of the budget to decode replicas (they own the
+        ``tokens_out`` mass) whose buckets no admission check ever reads,
+        throttling the prefill pool to a fraction of the fleet budget and
+        starving freshly scaled decode capacity of the very traffic it was
+        added for.  Prefill-role replicas are rated by their prefill-token
+        EWMA (their output-token rate is ~0: handoffs finish downstream);
+        unified replicas keep the historical output-token EWMA."""
+        rates: dict[int, float] = {}
+        for r in self.replicas:
+            if not r.accepts_prefill():
+                continue
+            if r.role == "prefill":
+                rates[r.replica_id] = self.monitor.replica_prefill_rate.get(
+                    r.replica_id, 0.0)
+            else:
+                rates[r.replica_id] = self.monitor.replica_rate.get(
+                    r.replica_id, 0.0)
+        return rates
 
     def _apply_event(self, ev: ScenarioEvent) -> None:
         if ev.action == "fail":
@@ -369,6 +439,8 @@ class ClusterSimulator:
     def run(self, requests: list[Request],
             scenario: Sequence[ScenarioEvent] = (),
             max_sim_time: float = 1e7) -> ClusterSimResult:
+        """Drive ``requests`` (+ scripted fault events) to completion;
+        returns the aggregated :class:`ClusterSimResult`."""
         arrivals = sorted(requests, key=lambda r: r.arrival_time)
         events = sorted(scenario, key=lambda e: e.time)
         ai = ei = 0
@@ -418,7 +490,8 @@ class ClusterSimulator:
                     # throughput (no-op unless AdmissionConfig enables it);
                     # per-replica shares follow the per-replica EWMAs.
                     self.admission.set_measured_rate(rate)
-                    self.admission.set_replica_rates(self.monitor.replica_rate)
+                    self.admission.set_replica_rates(
+                        self._admission_share_rates())
                 dead, drain = self.monitor.check(self.replicas, t)
                 for rep in dead:
                     self._handle_failure(rep)
@@ -505,12 +578,17 @@ class ClusterSimulator:
             + len(self.backlog)
 
     def _replica_stat(self, rep: ReplicaModel) -> dict:
+        """Per-replica result row (see ``ClusterSimResult.replica_stats``)."""
         stat = {"replica_id": rep.replica_id, "role": rep.role,
                 "speed": rep.speed, "alive": rep.alive,
                 "draining": rep.draining, "served": rep.served,
                 "preemptions": rep.preemptions, "ticks": rep.ticks,
                 "busy_time": rep.busy_time,
-                "kv_occupancy": rep.kv_occupancy()}
+                "kv_occupancy": rep.kv_occupancy(),
+                "born": rep.born, "died": rep.died,
+                "replica_seconds": max(
+                    0.0, (rep.died if rep.died is not None else self.now)
+                    - rep.born)}
         if rep.radix is not None:
             stat["prefix_cache"] = rep.radix.stats()
             stat["prefix_saved_tokens"] = rep.prefix_saved_tokens

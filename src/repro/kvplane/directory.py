@@ -24,6 +24,8 @@ from typing import Dict, Optional, Sequence
 
 @dataclass
 class PrefixDirectoryConfig:
+    """Sync cadence, capacity bound, and staleness window for the fleet
+    prefix map."""
     sync_interval: float = 2.0       # publish→merge cadence (s)
     advertise_k: int = 64            # per-replica advert cap (enforced here too)
     max_entries: int = 4096          # bound on distinct hashes in the view
@@ -58,6 +60,7 @@ class PrefixDirectory:
     # ---- cadence ---------------------------------------------------------
 
     def due(self, now: float) -> bool:
+        """Whether a directory sync round is owed on the shared cadence."""
         return now - self._last_sync >= self.cfg.sync_interval
 
     # ---- publish / forget ------------------------------------------------
@@ -149,6 +152,7 @@ class PrefixDirectory:
         return best_rid, best_blocks
 
     def stats(self) -> dict:
+        """Directory telemetry: epoch, entry count, publish/merge totals."""
         return {"epoch": self.epoch, "entries": len(self._by_hash),
                 "publishers": len(self._adverts),
                 "publishes": self.publishes, "merges": self.merges,

@@ -80,6 +80,7 @@ class PrefixMatch:
     blocks: int                      # matched full blocks
 
     def tokens(self, block_size: int) -> int:
+        """Matched prefix depth in tokens (blocks x block_size)."""
         return self.blocks * block_size
 
 
@@ -141,6 +142,8 @@ class RadixPrefixIndex:
             node = node.parent
 
     def unpin(self, node: Optional[_Node]) -> None:
+        """Release one pin on a node's path (eviction eligibility returns
+        when the last pin drops)."""
         while node is not None and node is not self._root:
             node.pins = max(0, node.pins - 1)
             node = node.parent
@@ -281,6 +284,7 @@ class RadixPrefixIndex:
                 assert node.parent.pins >= node.pins
 
     def stats(self) -> dict:
+        """Cache telemetry: nodes, resident blocks, lookups, hits, evictions."""
         return {"cached_blocks": self.cached_blocks,
                 "lookups": self.lookups, "hit_blocks": self.hits,
                 "inserted": self.inserted, "evicted": self.evicted,

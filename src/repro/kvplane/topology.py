@@ -41,6 +41,7 @@ class PrefixFetch:
 
 @dataclass
 class LinkTopologyConfig:
+    """Per-link bandwidth, hop latency, and the compute-overlap factor."""
     link_bandwidth: float = ICI_BW   # bytes/s per directed link
     hop_latency: float = 20e-6       # per-hop launch latency (s)
     overlap: float = 0.7             # fraction of transfer hidden by compute
@@ -49,6 +50,8 @@ class LinkTopologyConfig:
 
 @dataclass
 class LinkTopology:
+    """Per-(src,dst) link clocks over a ring: KV handoffs and remote
+    prefix fetches contend on the same links, overlapped with compute."""
     cfg: LinkTopologyConfig = field(default_factory=LinkTopologyConfig)
     # (src, dst) -> busy-until clock for that directed link
     busy: dict = field(default_factory=dict)
@@ -64,6 +67,7 @@ class LinkTopology:
     # ---- geometry --------------------------------------------------------
 
     def hops(self, src: int, dst: int) -> int:
+        """Ring hop distance between two replicas."""
         if src == dst or src < 0 or dst < 0:
             return 0
         self._max_id = max(self._max_id, src, dst)
@@ -123,6 +127,7 @@ class LinkTopology:
         return exposed
 
     def stats(self) -> dict:
+        """Aggregate transfer accounting (compatible with HandoffChannel)."""
         moves = self.handoffs + self.fetches
         return {"handoffs": self.handoffs,
                 "fetches": self.fetches,

@@ -37,6 +37,8 @@ _SESSION_NS = 1 << 24
 
 @dataclass
 class SharedPrefixWorkloadSpec:
+    """Multi-turn / agentic session generator: shared system prompt,
+    growing per-session histories, optional branching."""
     n_sessions: int = 32
     turns_per_session: int = 6
     session_rate: float = 2.0        # session starts / s (Poisson)
@@ -50,6 +52,8 @@ class SharedPrefixWorkloadSpec:
     seed: int = 0
 
     def generate(self) -> list[Request]:
+        """Materialize the session tree as arrival-sorted ``Request``s with
+        chained block hashes."""
         rng = np.random.default_rng(self.seed)
         sys_tokens = list(range(1, self.system_prompt_len + 1))
         starts = np.cumsum(rng.exponential(1.0 / self.session_rate,

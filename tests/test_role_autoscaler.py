@@ -1,0 +1,261 @@
+"""Role-aware disaggregated autoscaling: per-role burn signals, independent
+per-pool scale decisions under a fleet budget clamp, role-tagged scale-up
+warm starts, drain guards, and single-count burn accounting when a
+policy-sync round shares the control-loop iteration."""
+
+import copy
+
+import pytest
+
+from repro.cluster import (AutoscalerConfig, ClusterSimulator, HealthMonitor,
+                           PolicyStore, PolicyStoreConfig, ReplicaModel,
+                           RolePoolConfig, SLOBurnAutoscaler, make_fleet,
+                           make_router)
+from repro.core import (CostModel, EWSJFConfig, EWSJFScheduler, FCFSScheduler,
+                        WorkloadSpec)
+
+
+def cost_model():
+    return CostModel(mfu=0.15, hbm_eff=0.7)
+
+
+def ewsjf_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=32, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+def role_pools(**overrides):
+    kw = dict(min_replicas=1, max_replicas=4, up_patience=1,
+              cooldown_up=0.25)
+    kw.update(overrides)
+    return tuple(RolePoolConfig(role=role, **kw)
+                 for role in ("prefill", "decode"))
+
+
+def burst_workload(rate=30.0, n=300, tail_n=80, tail_rate=4.0, seed=0):
+    wl = WorkloadSpec(n_requests=n, arrival_rate=rate, seed=seed).generate()
+    tail = WorkloadSpec(n_requests=tail_n, arrival_rate=tail_rate,
+                        seed=seed + 1).generate()
+    t0 = wl[-1].arrival_time
+    for r in tail:
+        r.arrival_time += t0
+    return wl + tail
+
+
+class TestRoleSignals:
+    def test_pool_signal_resolution(self):
+        assert RolePoolConfig(role="prefill").burn_signal() == "prefill"
+        assert RolePoolConfig(role="decode").burn_signal() == "decode"
+        assert RolePoolConfig(role="unified").burn_signal() == "max"
+        assert RolePoolConfig(role="decode",
+                              signal="max").burn_signal() == "max"
+
+    def test_decode_burn_from_samples_and_decay(self):
+        """TBT / KV / inbox pressure all normalize against their targets;
+        an empty sample round decays the signal instead of freezing it."""
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(
+            pools=role_pools(), tbt_budget=0.05, kv_target=0.85,
+            inbox_target=0.25, ewma_alpha=1.0))
+        # TBT at 2x budget dominates the other (idle) terms
+        assert asc.ingest_decode([(0.10, 0.0, 0.0)]) == pytest.approx(2.0)
+        # KV at target = pressure 1.0
+        assert asc.ingest_decode([(0.0, 0.85, 0.0)]) == pytest.approx(1.0)
+        # pool burn is the mean over replicas, not the max
+        assert asc.ingest_decode([(0.10, 0.0, 0.0),
+                                  (0.0, 0.0, 0.0)]) == pytest.approx(1.0)
+        assert asc.ingest_decode([]) == pytest.approx(0.0)
+
+    def test_decode_pressure_scales_decode_pool_only(self):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, roles=["prefill", "decode"])
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(pools=role_pools()))
+        asc.ingest([])                                   # prefill burn ~0
+        asc.ingest_decode([(1.0, 0.95, 1.0)])            # decode saturated
+        acts = asc.decide_roles(fleet, now=0.0)
+        assert [(a, p.role) for a, p in acts] == [("up", "decode")]
+
+    def test_prefill_burn_scales_prefill_pool_only(self):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, roles=["prefill", "decode"])
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(pools=role_pools()))
+        asc.ingest([(64.0, 0, 5.0)])     # interactive delay 5x its budget
+        asc.ingest_decode([(0.0, 0.1, 0.0)])
+        acts = asc.decide_roles(fleet, now=0.0)
+        assert [(a, p.role) for a, p in acts] == [("up", "prefill")]
+
+
+class TestBudgetClampAndDrain:
+    def test_fleet_budget_clamp_prioritizes_highest_burn(self):
+        """Both pools breach but the fleet-total budget admits one more
+        replica: the pool burning hardest relative to its threshold wins."""
+        cost = cost_model()
+        fleet = make_fleet(2, cost, roles=["prefill", "decode"])
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(
+            pools=role_pools(), fleet_max_replicas=3))
+        asc.ingest([(64.0, 0, 2.0)])                     # prefill burn 2x
+        asc.ingest_decode([(1.0, 0.95, 1.0)])            # decode burn ~20x
+        acts = asc.decide_roles(fleet, now=0.0)
+        assert [(a, p.role) for a, p in acts] == [("up", "decode")]
+
+    def test_drains_free_budget_for_ups_same_round(self):
+        cost = cost_model()
+        fleet = make_fleet(4, cost,
+                           roles=["prefill", "prefill", "prefill", "decode"])
+        pools = (RolePoolConfig(role="prefill", min_replicas=1,
+                                down_patience=1, cooldown_down=0.0),
+                 RolePoolConfig(role="decode", min_replicas=1,
+                                up_patience=1, cooldown_up=0.0))
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(
+            pools=pools, fleet_max_replicas=4))
+        asc.ingest([])                                   # prefill idle
+        asc.ingest_decode([(1.0, 0.95, 1.0)])            # decode saturated
+        acts = asc.decide_roles(fleet, now=0.0)
+        # the prefill drain is emitted first, freeing the budget the
+        # decode scale-up then fits into
+        assert [(a, p.role) for a, p in acts] == [("down", "prefill"),
+                                                  ("up", "decode")]
+
+    def test_refused_drain_frees_no_budget(self):
+        """A down-eligible pool whose only member is strand-guarded must
+        not free a phantom budget slot for another pool's scale-up — the
+        fleet clamp would otherwise leak one replica per round."""
+        cost = cost_model()
+        fleet = make_fleet(2, cost, roles=["prefill", "decode"])
+        pools = (RolePoolConfig(role="prefill", min_replicas=0,
+                                down_patience=1, cooldown_down=0.0),
+                 RolePoolConfig(role="decode", min_replicas=1,
+                                up_patience=1, cooldown_up=0.0))
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(
+            pools=pools, fleet_max_replicas=2))
+        asc.ingest([])                                   # prefill idle
+        asc.ingest_decode([(1.0, 0.95, 1.0)])            # decode saturated
+        # no down (the sole prefill replica is strand-guarded), and
+        # therefore no up either (the fleet is at its budget)
+        assert asc.decide_roles(fleet, now=0.0) == []
+
+    def test_drain_never_strands_a_role(self):
+        """The last prefill-capable / decode-capable replica is refused as
+        a drain victim even when its pool's floor would allow it."""
+        cost = cost_model()
+        fleet = make_fleet(2, cost, roles=["prefill", "decode"])
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(
+            pools=role_pools(min_replicas=0)))
+        prefill_pool, decode_pool = asc.cfg.pools
+        assert asc.drain_candidate(fleet, pool=prefill_pool) is None
+        assert asc.drain_candidate(fleet, pool=decode_pool) is None
+        # with two prefill replicas, one may go — and it is the idle one
+        fleet = make_fleet(3, cost, roles=["prefill", "prefill", "decode"])
+        victim = asc.drain_candidate(fleet, pool=prefill_pool)
+        assert victim is not None and victim.role == "prefill"
+        # but the decode pool still refuses (one decode-capable replica)
+        assert asc.drain_candidate(fleet, pool=decode_pool) is None
+
+    def test_pool_min_replicas_floor(self):
+        cost = cost_model()
+        fleet = make_fleet(4, cost,
+                           roles=["prefill", "prefill", "decode", "decode"])
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig(
+            pools=role_pools(min_replicas=2)))
+        for pool in asc.cfg.pools:
+            assert asc.drain_candidate(fleet, pool=pool) is None
+
+    def test_legacy_single_pool_path_unchanged(self):
+        asc = SLOBurnAutoscaler(cfg=AutoscalerConfig())
+        assert not asc.role_aware
+        cost = cost_model()
+        fleet = make_fleet(2, cost)
+        asc.ingest([(64.0, 0, 3.0)])
+        assert asc.decide(fleet, 0.0) is None            # patience not met
+        asc.ingest([(64.0, 0, 3.0)])
+        assert asc.decide(fleet, 0.25) == "up"
+
+
+class TestEndToEnd:
+    def _run(self, policy_store=None, seed=0):
+        cost = cost_model()
+        fleet = make_fleet(2, cost, scheduler_factory=ewsjf_factory,
+                           roles=["prefill", "decode"])
+        asc = SLOBurnAutoscaler(
+            scheduler_factory=ewsjf_factory,
+            cfg=AutoscalerConfig(pools=role_pools(), fleet_max_replicas=8))
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                               autoscaler=asc, policy_store=policy_store)
+        wl = burst_workload(seed=seed)
+        res = sim.run(wl)
+        return sim, res, len(wl)
+
+    def test_role_tagged_scale_up_recovers_and_warm_starts(self):
+        """A prefill-side burst grows only the prefill pool; with a policy
+        store attached, every scaled-up replica warm-starts from the fleet
+        policy (adopted epoch set before serving) instead of relearning a
+        single [0, inf) queue."""
+        store = PolicyStore(PolicyStoreConfig(sync_interval=1.0))
+        sim, res, n = self._run(policy_store=store)
+        assert len(res.finished) == n                    # nothing lost
+        ups = [e for e in res.autoscale["events"] if e[1] == "up"]
+        assert ups and all(e[3] == "prefill" for e in ups)
+        assert res.autoscale["by_role"]["prefill"]["ups"] >= 1
+        scaled = [r for r in sim.replicas if r.born > 0.0]
+        assert scaled
+        # warm start marks the adopted epoch at install time; a cold
+        # scheduler would sit at -1 until its own first sync round
+        assert all(r.sched.adopted_epoch >= 0 for r in scaled
+                   if r.role == "prefill")
+
+    def test_policy_sync_round_does_not_double_count_burn(self):
+        """Delay samples are drained from the dispatch logs exactly once
+        per control round: a policy-sync round sharing the event-loop
+        iteration must leave the burn trajectory bit-identical.  (FCFS
+        replicas make the store a structural no-op, so any divergence
+        could only come from double-counted samples.)"""
+        def run(with_store):
+            cost = cost_model()
+            fleet = make_fleet(2, cost, scheduler_factory=FCFSScheduler,
+                               roles=["prefill", "decode"])
+            asc = SLOBurnAutoscaler(
+                scheduler_factory=FCFSScheduler,
+                cfg=AutoscalerConfig(pools=role_pools()))
+            store = (PolicyStore(PolicyStoreConfig(sync_interval=0.25))
+                     if with_store else None)
+            sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                                   autoscaler=asc, policy_store=store)
+            sim.run(copy.deepcopy(wl))
+            return asc
+
+        wl = burst_workload(n=150, tail_n=40)
+        a1, a2 = run(with_store=False), run(with_store=True)
+        assert a1.burn == a2.burn
+        assert a1.decode_burn == a2.decode_burn
+        assert [(e.time, e.action, e.role) for e in a1.events] == \
+               [(e.time, e.action, e.role) for e in a2.events]
+
+    def test_delay_samples_drained_once(self):
+        """The monitor's dispatch-log drain is destructive: a second read
+        in the same round only sees head-of-line waits, never the same
+        dispatch sample twice."""
+        cost = cost_model()
+        rep = ReplicaModel(0, cost, scheduler=FCFSScheduler())
+        from repro.core import Request
+        rep.dispatch_log.append((Request(prompt_len=64, arrival_time=0.0),
+                                 0.5))
+        mon = HealthMonitor()
+        first = mon.delay_samples([rep], now=1.0)
+        assert (64.0, 0, 0.5) in first
+        assert (64.0, 0, 0.5) not in mon.delay_samples([rep], now=1.0)
+
+    def test_replica_seconds_accounting(self):
+        """Scale-ups are charged from birth, drains stop the meter; the
+        aggregate replica_seconds is what the bench's claim divides."""
+        sim, res, _ = self._run()
+        stats = {s["replica_id"]: s for s in res.replica_stats}
+        for rep in sim.replicas:
+            s = stats[rep.replica_id]
+            assert s["replica_seconds"] >= 0.0
+            if rep.born > 0.0:
+                assert s["born"] == rep.born
+            if s["died"] is not None:
+                assert s["died"] >= s["born"]
+        assert res.replica_seconds == pytest.approx(
+            sum(s["replica_seconds"] for s in res.replica_stats))
+        # capacity consumed can never exceed fleet-size x wall-clock
+        assert res.replica_seconds <= len(sim.replicas) * res.total_time

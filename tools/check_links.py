@@ -1,0 +1,110 @@
+"""Markdown link checker for the docs layer (no dependencies).
+
+Scans the given markdown files for ``[text](target)`` links and verifies
+that every *relative* target resolves to a file or directory on disk
+(``#anchor`` fragments are checked against the target file's headings
+using GitHub's slug rules — lowercase, spaces to dashes, punctuation
+stripped).  External links (``http(s)://``, ``mailto:``) are skipped:
+checking them would make CI flaky on network weather, and the job's
+purpose is to keep the *internal* docs graph from rotting.
+
+    python tools/check_links.py README.md ROADMAP.md docs/*.md
+
+Exits 1 listing every broken link, 0 when the docs graph is intact.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — but not images' size suffixes or in-code backticks;
+# nested ``[![badge](img)](url)`` resolves outer-first, which is fine
+# because both targets get extracted by the finditer pass.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code/links, lowercase,
+    drop punctuation, spaces to dashes."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)   # [t](u) -> t
+    text = re.sub(r"[`*_]", "", text).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set[str]:
+    try:
+        content = path.read_text(encoding="utf-8")
+    except OSError:
+        return set()
+    slugs = set()
+    fence = False
+    for line in content.splitlines():
+        if line.lstrip().startswith("```"):
+            fence = not fence
+            continue
+        if not fence:
+            m = re.match(r"^#{1,6}\s+(.*)$", line)
+            if m:
+                slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def check_file(md: Path, repo_root: Path) -> list[str]:
+    errors: list[str] = []
+    content = md.read_text(encoding="utf-8")
+    # strip fenced code blocks: ASCII diagrams and shell examples are full
+    # of "[x](y)"-shaped noise that isn't a link
+    content = re.sub(r"```.*?```", "", content, flags=re.DOTALL)
+    for m in LINK_RE.finditer(content):
+        target = m.group(1)
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:                      # same-file #anchor
+            dest = md
+        else:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(repo_root)}: broken link "
+                              f"-> {target}")
+                continue
+        if anchor and dest.suffix == ".md":
+            # Compare the fragment *raw*: GitHub matches it against the
+            # lowercase heading slug case-sensitively, so normalizing the
+            # fragment here would bless miscased anchors that 404 live.
+            if anchor not in headings_of(dest):
+                errors.append(f"{md.relative_to(repo_root)}: missing anchor "
+                              f"-> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    files = [Path(a).resolve() for a in argv] or sorted(
+        list(repo_root.glob("*.md")) + list(repo_root.glob("docs/*.md"))
+        + list(repo_root.glob("benchmarks/*.md")))
+    errors: list[str] = []
+    checked = 0
+    for md in files:
+        if not md.exists():
+            errors.append(f"file not found: {md}")
+            continue
+        checked += 1
+        errors.extend(check_file(md, repo_root))
+    if errors:
+        print(f"LINK CHECK: {len(errors)} broken link(s) across "
+              f"{checked} file(s):")
+        for e in errors:
+            print(f"  FAIL {e}")
+        return 1
+    print(f"link check OK: {checked} markdown file(s), all relative links "
+          f"and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
