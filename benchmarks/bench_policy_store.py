@@ -36,7 +36,7 @@ from repro.core import (EWSJFConfig, EWSJFScheduler, WorkloadSpec,
                         edge_divergence)
 from repro.core.scoring import weights_for_queue
 
-from .common import cost_model, emit
+from .common import cost_model, emit, slo_ttft
 
 SHORT = 256
 WINDOW = 10                      # rolling short-TTFT window (requests)
@@ -106,9 +106,12 @@ def warm_start_section(cost, quick: bool) -> dict:
     n = 200 if quick else 400
     seeds = (5, 17, 42)
     warm_req, cold_req, thr = [], [], []
+    warm_fin, cold_fin = [], []
     for seed in seeds:
         res_w, tw = run_probe(cost, policy, True, seed, n)
         res_c, tc = run_probe(cost, policy, False, seed, n)
+        warm_fin.extend(res_w.finished)
+        cold_fin.extend(res_c.finished)
         # steady state: the warm run's tail — both runs serve the identical
         # stream, so the tail regime (long past either transient) is shared
         steady = float(np.mean(tw[-max(1, len(tw) // 3):]))
@@ -120,6 +123,8 @@ def warm_start_section(cost, quick: bool) -> dict:
     return {"warm_requests_to_steady": w, "cold_requests_to_steady": c,
             "recovery_ratio": w / max(c, 1e-9), "thr_ratio": thr_ratio,
             "per_seed_warm": warm_req, "per_seed_cold": cold_req,
+            "warm_slo_ttft": slo_ttft(warm_fin),
+            "cold_slo_ttft": slo_ttft(cold_fin),
             "n_queues_global": len(policy.boundaries),
             "n_trials_global": len(policy.trials),
             "claim_ok": bool(w <= 0.5 * c and 0.95 <= thr_ratio <= 1.05)}
@@ -181,6 +186,7 @@ def divergence_section(cost, quick: bool) -> dict:
         cv, edge = _divergence(sim)
         out[name] = {"score_cv": cv, "edge_divergence": edge,
                      "tok_per_s": res.tok_per_s,
+                     "slo_ttft": slo_ttft(res.finished),
                      "policy": res.policy}
     thr_ratio = out["sync"]["tok_per_s"] / max(out["solo"]["tok_per_s"], 1e-9)
     out["divergence_ratio"] = (out["sync"]["score_cv"]

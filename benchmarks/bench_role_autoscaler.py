@@ -128,7 +128,15 @@ def _metrics(res) -> dict:
            if classify_by_length(r) == "interactive" and r.ttft is not None
            and r.arrival_time >= settle]
     by_role = res.autoscale["by_role"]
-    return {"short_ttft_mean": res.ttft_stats()["short"]["mean"],
+    # Shared SLO view (repro.obs.slo): "interactive" == the gated short
+    # class; means exact, p95 histogram-bounded and reported-only.
+    slo = res.slo_report()
+    short = slo.get("interactive", {}).get("ttft") or {"mean": 0.0,
+                                                       "p95": 0.0}
+    return {"short_ttft_mean": short["mean"],
+            "short_ttft_p95": short["p95"],
+            "slo_ttft": {c: v["ttft"] for c, v in slo.items()
+                         if "ttft" in v},
             "recovery_ttft_mean": (sum(rec) / len(rec) if rec else 0.0),
             "recovery_n": len(rec),
             "tok_per_s": res.tok_per_s,

@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.core import ServingSimulator, uniform_workload
 
-from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+from .common import (SCALE, cost_model, engine_params, fmt_slo_ttft,
+                     make_ewsjf, make_fcfs, slo_ttft)
 
 
 def run(seed: int = 0):
@@ -35,11 +36,12 @@ def run(seed: int = 0):
                 "util_pct": round(r.utilization * 100, 1),
                 "p95_latency_s": round(float(np.percentile(lat, 95)), 2)
                 if len(lat) else 0.0,
+                "slo_ttft": slo_ttft(r.finished),
             })
     return rows
 
 
-def main() -> None:
+def main() -> dict:
     t0 = time.perf_counter()
     rows = run()
     us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
@@ -47,7 +49,8 @@ def main() -> None:
         print(f"table10,{us:.0f},"
               f"regime={r['regime']}|method={r['method']}|req_s={r['req_s']}|"
               f"tok_s={r['tok_s']}|time_s={r['time_s']}|util={r['util_pct']}%|"
-              f"p95={r['p95_latency_s']}s")
+              f"p95={r['p95_latency_s']}s|{fmt_slo_ttft(r['slo_ttft'])}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

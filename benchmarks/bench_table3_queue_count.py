@@ -10,7 +10,8 @@ import time
 
 from repro.core import WorkloadSpec, run_comparison
 
-from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+from .common import (SCALE, cost_model, engine_params, fmt_slo_ttft,
+                     make_ewsjf, make_fcfs, slo_ttft)
 
 
 def run(n_requests: int | None = None, rate: float = 40.0, seed: int = 0):
@@ -28,11 +29,12 @@ def run(n_requests: int | None = None, rate: float = 40.0, seed: int = 0):
             "time_s": round(r.total_time, 1),
             "req_s": round(r.req_per_s, 2),
             "tok_s": round(r.tok_per_s, 1),
+            "slo_ttft": slo_ttft(r.finished),
         })
     return rows
 
 
-def main() -> None:
+def main() -> dict:
     t0 = time.perf_counter()
     rows = run()
     us = (time.perf_counter() - t0) * 1e6
@@ -41,7 +43,8 @@ def main() -> None:
         sp = r["tok_s"] / max(base["tok_s"], 1e-9) - 1.0
         print(f"table3,{us/len(rows):.0f},"
               f"{r['method']}|req_s={r['req_s']}|tok_s={r['tok_s']}|"
-              f"speedup={sp*100:+.1f}%")
+              f"speedup={sp*100:+.1f}%|{fmt_slo_ttft(r['slo_ttft'])}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

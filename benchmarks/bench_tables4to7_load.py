@@ -10,7 +10,8 @@ import time
 
 from repro.core import WorkloadSpec, run_comparison
 
-from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+from .common import (SCALE, cost_model, engine_params, fmt_slo_ttft,
+                     make_ewsjf, make_fcfs, slo_ttft)
 
 # Paper SS6.5: each size is a different composition (Short-Heavy /
 # Moderate / Balanced / Production Scale).
@@ -45,11 +46,13 @@ def run(sizes=("10k_short_heavy", "30k_moderate"), rates=RATES, seed: int = 0):
                                       - 1) * 100, 1),
                 "fcfs_abort": round(f.abort_rate * 100, 1),
                 "ewsjf_abort": round(e.abort_rate * 100, 1),
+                "fcfs_slo_ttft": slo_ttft(f.finished),
+                "ewsjf_slo_ttft": slo_ttft(e.finished),
             })
     return rows
 
 
-def main() -> None:
+def main() -> dict:
     t0 = time.perf_counter()
     rows = run()
     us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
@@ -58,7 +61,9 @@ def main() -> None:
               f"size={r['size']}|rate={r['rate']:.0f}|"
               f"fcfs_tok_s={r['fcfs_tok_s']}|ewsjf_tok_s={r['ewsjf_tok_s']}|"
               f"speedup={r['speedup_pct']:+.1f}%|"
-              f"aborts_fcfs={r['fcfs_abort']}%|aborts_ewsjf={r['ewsjf_abort']}%")
+              f"aborts_fcfs={r['fcfs_abort']}%|aborts_ewsjf={r['ewsjf_abort']}%|"
+              f"ewsjf_{fmt_slo_ttft(r['ewsjf_slo_ttft'], pcts=(95,))}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

@@ -11,7 +11,8 @@ import time
 
 from repro.core import ServingSimulator, uniform_workload
 
-from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs
+from .common import (SCALE, cost_model, engine_params, fmt_slo_ttft,
+                     make_ewsjf, make_fcfs, slo_ttft)
 
 QUEUE_COUNTS = (5, 10, 20, 30, 40)
 
@@ -28,25 +29,29 @@ def run(seed: int = 0):
         r = sim.run(copy.deepcopy(base))
         rows.append({"regime": regime, "method": "fcfs", "queues": 1,
                      "req_s": round(r.req_per_s, 2),
-                     "tok_s": round(r.tok_per_s, 1)})
+                     "tok_s": round(r.tok_per_s, 1),
+                     "slo_ttft": slo_ttft(r.finished)})
         for k in QUEUE_COUNTS:
             sim = ServingSimulator(make_ewsjf(max_queues=k), cost_model(),
                                    engine_params())
             r = sim.run(copy.deepcopy(base))
             rows.append({"regime": regime, "method": f"ewsjf", "queues": k,
                          "req_s": round(r.req_per_s, 2),
-                         "tok_s": round(r.tok_per_s, 1)})
+                         "tok_s": round(r.tok_per_s, 1),
+                         "slo_ttft": slo_ttft(r.finished)})
     return rows
 
 
-def main() -> None:
+def main() -> dict:
     t0 = time.perf_counter()
     rows = run()
     us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
     for r in rows:
         print(f"tables8to9,{us:.0f},"
               f"regime={r['regime']}|method={r['method']}|queues={r['queues']}|"
-              f"req_s={r['req_s']}|tok_s={r['tok_s']}")
+              f"req_s={r['req_s']}|tok_s={r['tok_s']}|"
+              f"{fmt_slo_ttft(r['slo_ttft'], pcts=(95,))}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

@@ -14,7 +14,8 @@ import time
 
 from repro.core import ServingSimulator, WorkloadSpec
 
-from .common import SCALE, cost_model, engine_params, make_ewsjf, make_fcfs, make_sjf
+from .common import (SCALE, cost_model, engine_params, fmt_slo_ttft,
+                     make_ewsjf, make_fcfs, make_sjf, slo_ttft)
 
 
 def run(seed: int = 0):
@@ -37,11 +38,12 @@ def run(seed: int = 0):
             "long_starved_pct": round(100 * len(long_ab)
                                       / max(len(long_fin) + len(long_ab), 1), 1),
             "tok_s": round(r.tok_per_s, 1),
+            "slo_ttft": slo_ttft(r.finished),
         })
     return rows
 
 
-def main() -> None:
+def main() -> dict:
     t0 = time.perf_counter()
     rows = run()
     us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
@@ -52,7 +54,9 @@ def main() -> None:
               f"method={r['method']}|ttft_short={r['ttft_short_mean']}s|"
               f"ttft_improvement_vs_fcfs={x:.1f}x|"
               f"ttft_long={r['ttft_long_mean']}s|"
-              f"long_starved={r['long_starved_pct']}%|tok_s={r['tok_s']}")
+              f"long_starved={r['long_starved_pct']}%|tok_s={r['tok_s']}|"
+              f"{fmt_slo_ttft(r['slo_ttft'])}")
+    return {"rows": rows}
 
 
 if __name__ == "__main__":

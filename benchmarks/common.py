@@ -66,6 +66,31 @@ def make_sjf() -> SJFScheduler:
     return SJFScheduler()
 
 
+def slo_ttft(finished) -> dict:
+    """Per-SLO-class TTFT percentiles (+ pooled ``_all``) through the
+    shared observability histogram path, so every bench reports p50/p95/p99
+    from the same bucketing and carries the same one-bucket bound
+    (``repro.obs.slo.slo_from_requests``).
+
+    ``{class: {"mean": ..., "n": ..., "p50": ..., "p95": ..., "p99": ...}}``
+    — means are exact, percentiles are histogram upper-bounds."""
+    from repro.obs import slo_from_requests
+    return {cls: view["ttft"]
+            for cls, view in slo_from_requests(finished).items()
+            if "ttft" in view}
+
+
+def fmt_slo_ttft(cols: dict, pcts=(50, 95, 99)) -> str:
+    """Compact CSV form of :func:`slo_ttft`:
+    ``ttft_interactive=p50:0.12/p95:0.48/p99:0.96|ttft_standard=...``"""
+    parts = []
+    for cls in sorted(cols):
+        row = cols[cls]
+        vals = "/".join(f"p{p}:{row[f'p{p}']:.3f}" for p in pcts)
+        parts.append(f"ttft_{cls}={vals}")
+    return "|".join(parts)
+
+
 @contextmanager
 def timed(results: dict, name: str):
     t0 = time.perf_counter()

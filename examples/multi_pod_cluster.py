@@ -18,6 +18,7 @@ from repro.cluster import (AdmissionConfig, AdmissionController,
                            make_fleet, make_router)
 from repro.core import CostModel, EWSJFConfig, EWSJFScheduler, WorkloadSpec
 from repro.kvplane import SharedPrefixWorkloadSpec, agentic_mix
+from repro.obs import Observability
 
 
 def scheduler_factory():
@@ -177,6 +178,49 @@ def main() -> None:
     print(f"   replica-seconds consumed: {res.replica_seconds:.1f}")
     for t, action, rid, role in res.autoscale["events"]:
         print(f"   t={t:6.2f}s scale-{action} ({role} replica {rid})")
+
+    print("\n== scenario 7: observability plane — tracing a failure + "
+          "straggler run, flight-recorder post-mortem")
+    obs = Observability.enabled()
+    fleet = make_fleet(4, cost, scheduler_factory=scheduler_factory,
+                       speeds=[1.0, 1.0, 1.0, 0.25])   # replica 3 straggles
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           admission=AdmissionController(shed_factor=4.0),
+                           obs=obs)
+    res = sim.run(WorkloadSpec(n_requests=300, arrival_rate=30.0,
+                               seed=9).generate(), scenario=[
+        ScenarioEvent(time=1.5, action="fail", replica_id=0)])
+    print_result(res)
+
+    # Per-SLO-class latency percentiles straight from the shared registry.
+    for cls, view in sorted(obs.slo_report().items()):
+        if cls.startswith("_") or "ttft" not in view:
+            continue
+        t = view["ttft"]
+        print(f"   {cls:12s} ttft p50={t['p50']*1e3:6.1f} ms "
+              f"p95={t['p95']*1e3:6.1f} ms p99={t['p99']*1e3:6.1f} ms "
+              f"(n={t['n']})")
+
+    # The failure froze the tracer ring into a flight dump; post-mortem the
+    # worst-hit finished request (longest queue wait) from the recorder.
+    stats = obs.trace.stats()
+    dumps = ", ".join(f"{reason} @ t={t:.1f}s ({n_ev} events)"
+                      for t, reason, n_ev in stats["dumps"])
+    print(f"   tracer: {stats['events_emitted']} events emitted | "
+          f"flight dump frozen on {dumps}")
+    worst = max(res.finished,
+                key=lambda r: (r.first_token_time or r.arrival_time)
+                - r.arrival_time)
+    print(f"   post-mortem of the worst-hit request "
+          f"(TTFT {((worst.first_token_time or 0) - worst.arrival_time)*1e3:.1f} ms):")
+    for line in obs.trace.postmortem(worst.request_id).splitlines():
+        print(f"     {line}")
+
+    # Write the Perfetto-loadable trace next to the repo for inspection.
+    path = "multi_pod_trace.json"
+    obs.trace.dump_chrome_trace(path)
+    print(f"   full trace written to {path} — open at https://ui.perfetto.dev"
+          f" (summarize offline: python tools/trace_summary.py {path})")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Optional
 
-from ..core.types import Request, RequestState
+from ..core.types import Request, RequestState, TerminalState
 
 
 @dataclass(frozen=True)
@@ -135,6 +135,9 @@ class AdmissionController:
                  config: Optional[AdmissionConfig] = None):
         self.classes = {c.name: c for c in classes}
         self._classify = classify or classify_by_length
+        # Observability handle (obs.Observability), wired by the cluster
+        # simulator / serving engine.  None ⇒ zero-cost, decisions unchanged.
+        self.obs = None
         # No config → v1 semantics (one-shot shed, no retries/budgets); an
         # explicit AdmissionConfig wins over the legacy shed_factor arg.
         self.cfg = config or AdmissionConfig(shed_factor=shed_factor,
@@ -307,6 +310,12 @@ class AdmissionController:
         if retry and req.request_id in self._deferred_ids:
             self.readmitted[slo.name] += 1
         self._deferred_ids.discard(req.request_id)
+        if self.obs is not None:
+            self.obs.inc("admission_decisions_total",
+                         {"decision": "admit", "slo_class": slo.name})
+            self.obs.event("admit", now, request_id=req.request_id,
+                           data={"slo_class": slo.name,
+                                 "est_delay": round(est_delay, 6)})
         return AdmissionDecision(True, slo, reason="ok", est_delay=est_delay)
 
     def _retry_limit(self, slo: SLOClass) -> float:
@@ -325,10 +334,30 @@ class AdmissionController:
             self._retry_q.append(_RetryEntry(
                 req=req, slo=slo, next_attempt=now + self.cfg.retry_backoff,
                 first_reject=now))
+            if self.obs is not None:
+                self.obs.inc("admission_decisions_total",
+                             {"decision": "defer", "slo_class": slo.name})
+                self.obs.event("defer", now, request_id=req.request_id,
+                               data={"slo_class": slo.name, "why": why,
+                                     "est_delay": round(est_delay, 6)})
             return AdmissionDecision(False, slo, reason="defer",
                                      est_delay=est_delay)
         self.shed[slo.name] += 1
         self._deferred_ids.discard(req.request_id)
+        # The one terminal stamp for admission-rejected work: every caller
+        # (cluster simulator, serving engine) treats a non-defer rejection
+        # as a permanent shed.
+        req.terminal = TerminalState.SHED
+        if self.obs is not None:
+            decision = "budget_deny" if why == "budget" else "shed"
+            self.obs.inc("admission_decisions_total",
+                         {"decision": decision, "slo_class": slo.name})
+            self.obs.inc("requests_terminal_total",
+                         {"state": TerminalState.SHED.value,
+                          "slo_class": slo.name})
+            self.obs.event("shed", now, request_id=req.request_id,
+                           data={"slo_class": slo.name, "why": why,
+                                 "est_delay": round(est_delay, 6)})
         return AdmissionDecision(False, slo, reason=why, est_delay=est_delay)
 
     # ---- re-admission queue ----------------------------------------------
@@ -360,6 +389,15 @@ class AdmissionController:
                 self._deferred_ids.discard(e.req.request_id)
                 e.req.state = RequestState.FAILED
                 e.req.finish_time = now
+                e.req.terminal = TerminalState.SHED
+                if self.obs is not None:
+                    self.obs.inc("requests_terminal_total",
+                                 {"state": TerminalState.SHED.value,
+                                  "slo_class": e.slo.name})
+                    self.obs.event("shed", now,
+                                   request_id=e.req.request_id,
+                                   data={"slo_class": e.slo.name,
+                                         "why": "retry_expired"})
                 expired.append(e.req)
             else:
                 due.append(e.req)

@@ -41,7 +41,7 @@ from typing import Callable, Optional
 from ..core.batch_builder import BatchBudget
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
-from ..core.types import Request, RequestState, SchedulerSnapshot
+from ..core.types import Request, RequestState, SchedulerSnapshot, TerminalState
 from ..kvplane.radix import RadixPrefixIndex
 from ..serving.kv_cache import BlockPool
 from .disagg import KVHandoff
@@ -67,6 +67,32 @@ class ReplicaParams:
     def total_blocks(self) -> int:
         """Paged-KV pool capacity in blocks."""
         return self.kv_pool_tokens // self.block_size
+
+
+class _ObsHandles:
+    """Per-replica pre-bound metric series: labels are resolved once when
+    the obs handle is wired, so the per-tick recording below is one dict
+    update or bisect (the overhead contract is ≤ 10% with everything on).
+    Names and labels follow the taxonomy in docs/ARCHITECTURE.md."""
+
+    __slots__ = ("queue_depth", "dispatch_wait", "dispatch_score",
+                 "prefill_seconds", "suffix_tokens", "cached_tokens",
+                 "kv_occ", "preempt", "score_tick")
+
+    def __init__(self, metrics, replica_id: int, preempt_kind: str):
+        rep = {"replica": replica_id}
+        self.queue_depth = metrics.gauge("sched_queue_depth", rep)
+        self.dispatch_wait: dict = {}        # slo_class -> LogHistogram
+        self.dispatch_score = metrics.hist("sched_dispatch_score")
+        self.score_tick = 0                  # head-score peek sampler
+        self.prefill_seconds = metrics.hist("prefill_batch_seconds", rep)
+        self.suffix_tokens = metrics.counter(
+            "prefill_tokens_total", {"kind": "suffix", "replica": replica_id})
+        self.cached_tokens = metrics.counter(
+            "prefill_tokens_total", {"kind": "cached", "replica": replica_id})
+        self.kv_occ = metrics.gauge("kv_occupancy", rep)
+        self.preempt = metrics.counter(
+            "preemptions_total", {"replica": replica_id, "kind": preempt_kind})
 
 
 @dataclass
@@ -145,6 +171,28 @@ class ReplicaModel:
         # by the control plane (health monitor → SLO-burn autoscaler).
         # Bounded: stale samples age out if nobody drains them.
         self.dispatch_log: deque = deque(maxlen=512)
+        # Observability handle (obs.Observability), wired by the cluster
+        # simulator.  Every emission site below is guarded on None so the
+        # disabled path is zero-cost and decisions stay bit-identical.
+        # Assigning builds per-replica metric handles (labels resolved
+        # once) so per-tick recording stays within the overhead contract.
+        self._obs = None
+        self._obsh: Optional[_ObsHandles] = None
+
+    # ---- observability wiring --------------------------------------------
+
+    @property
+    def obs(self):
+        """Observability handle (None = disabled, zero-cost path)."""
+        return self._obs
+
+    @obs.setter
+    def obs(self, value) -> None:
+        self._obs = value
+        self._obsh = None
+        if value is not None and value.metrics is not None:
+            kind = "evict" if self.role == "decode" else "preempt"
+            self._obsh = _ObsHandles(value.metrics, self.replica_id, kind)
 
     # ---- routing-facing introspection -----------------------------------
 
@@ -229,6 +277,11 @@ class ReplicaModel:
     def submit(self, req: Request, now: float) -> None:
         """Enqueue a routed request into the local scheduler."""
         self.sched.submit(req, now)
+        obs = self._obs
+        if obs is not None:
+            if obs.trace is not None:
+                obs.trace.emit("enqueue", now, req.request_id,
+                               self.replica_id)
 
     def accept_handoff(self, handoff: KVHandoff, now: float) -> None:
         """Receive a KV handoff (decode admission happens at the next tick)."""
@@ -358,6 +411,18 @@ class ReplicaModel:
                                           self.replica_id, now)
             node, _ = self.radix.insert(hashes[:want], now)
             reused = node.depth if node is not None else 0
+            if self.obs is not None:
+                link = f"{fetch.src_replica}->{self.replica_id}"
+                self.obs.event("prefix_fetch", now,
+                               request_id=r.request_id,
+                               replica_id=self.replica_id,
+                               data={"src": fetch.src_replica,
+                                     "bytes": int(n_bytes),
+                                     "exposed_s": round(exposed, 6)})
+                self.obs.inc("kv_fetch_bytes_total", {"link": link},
+                             float(n_bytes))
+                self.obs.observe("kv_fetch_exposed_seconds", exposed,
+                                 {"link": link})
         # Cache the blocks computed this pass too (they are about to exist).
         full_blocks = int(r.prompt_len) // self.p.block_size
         pin_node, _ = self.radix.insert(hashes[:full_blocks], now)
@@ -377,13 +442,33 @@ class ReplicaModel:
 
     def _prefill_tick(self, now: float) -> float:
         slots = self.p.max_num_seqs - len(self.running)
-        if slots <= 0 or self.sched.waiting() == 0:
+        if slots <= 0:
+            return 0.0
+        depth = self.sched.waiting()
+        if self._obsh is not None:
+            # Gauge the backlog here, where waiting() is already computed
+            # for the dispatch decision, instead of per-submit.
+            self._obsh.queue_depth.set(float(depth))
+        if depth == 0:
             return 0.0
         budget = BatchBudget(max_requests=slots,
                              max_tokens=self.p.max_prefill_tokens,
                              kv_blocks_free=self.free_blocks,
                              block_size=self.p.block_size,
                              pad_mode=self.p.bucket_pad)
+        head_scores = None
+        if self._obsh is not None:
+            # Read-only peek at the pre-dispatch head scores: a dispatched
+            # request was (approximately) the head of its queue, so its
+            # density-weighted score at dispatch is that queue's head score.
+            # The peek costs a snapshot delta, so it is *sampled* (every
+            # 4th dispatch round) and skipped entirely in trace-only runs;
+            # the dispatch-score histogram is statistical either way.
+            self._obsh.score_tick += 1
+            if self._obsh.score_tick % 4 == 1:
+                snap0 = self.sched.snapshot_cached(now)
+                head_scores = {q.queue_id: q.head_score
+                               for q in snap0.queues}
         plan = self.sched.tick(now, budget)
         if self.drop_fn is not None and plan.requests:
             live = []
@@ -391,15 +476,44 @@ class ReplicaModel:
                 if self.drop_fn(r, now):
                     r.state = RequestState.FAILED
                     r.finish_time = now
+                    r.terminal = TerminalState.DEADLINE_DROPPED
                     self.dropped.append(r)
+                    if self.obs is not None:
+                        cls = self.obs.slo_class(r)
+                        self.obs.event("deadline_drop", now,
+                                       request_id=r.request_id,
+                                       replica_id=self.replica_id,
+                                       data={"slo_class": cls})
+                        self.obs.inc(
+                            "requests_terminal_total",
+                            {"state": TerminalState.DEADLINE_DROPPED.value,
+                             "slo_class": cls})
                 else:
                     live.append(r)
             plan.requests = live
             plan.total_tokens = sum(int(r.effective_len) for r in live)
         if not plan.requests:
             return 0.0
+        obs, obsh = self._obs, self._obsh
         for r in plan.requests:
-            self.dispatch_log.append((r, max(0.0, now - r.arrival_time)))
+            wait = max(0.0, now - r.arrival_time)
+            self.dispatch_log.append((r, wait))
+            if obs is not None:
+                if obs.trace is not None:
+                    obs.trace.emit("dispatch", now, r.request_id,
+                                   self.replica_id, 0.0, {"wait": wait})
+                if obsh is not None:
+                    cls = r.slo_class
+                    if cls is None:
+                        cls = obs.slo_class(r)
+                    h = obsh.dispatch_wait.get(cls)
+                    if h is None:
+                        h = obsh.dispatch_wait[cls] = obs.metrics.hist(
+                            "sched_dispatch_wait_seconds",
+                            {"slo_class": cls})
+                    h.observe(wait)
+                    if head_scores and r.queue_id in head_scores:
+                        obsh.dispatch_score.observe(head_scores[r.queue_id])
         # Authoritative prefix resolution (the router's cached_len was an
         # estimate; the radix decides what is actually reusable now).
         attach = [self._prefix_attach(r, now) for r in plan.requests]
@@ -416,6 +530,21 @@ class ReplicaModel:
         dt = (self.cost.prefill_step_time(padded, mean_ctx) + exposed_fetch) \
             / max(self.speed, 1e-6)
         end = now + dt
+        if obs is not None:
+            cached_total = sum(a[0] for a in attach)
+            if obs.trace is not None:
+                obs.trace.emit("prefill", now, -1, self.replica_id, dt,
+                               {"batch": len(plan.requests),
+                                "suffix_tokens": suffix_tokens,
+                                "cached_tokens": cached_total})
+                for r in plan.requests:
+                    obs.trace.emit("first_token", end, r.request_id,
+                                   self.replica_id)
+            if obsh is not None:
+                obsh.prefill_seconds.observe(dt)
+                obsh.suffix_tokens.inc(float(suffix_tokens))
+                if cached_total:
+                    obsh.cached_tokens.inc(float(cached_total))
         for r, (cached, resident, pin_node, _) in zip(plan.requests, attach):
             r.state = RequestState.RUNNING_DECODE
             r.first_token_time = end
@@ -447,9 +576,11 @@ class ReplicaModel:
 
     def _decode_tick(self, now: float) -> float:
         dt = 0.0
+        steps = 0
         for _ in range(self.p.decode_steps_per_tick):
             if not self.running:
                 break
+            steps += 1
             need = sum(1 for rr in self.running
                        if (rr.kv_tokens % self.p.block_size) == 0)
             while need > self.free_blocks and len(self.running) > 1:
@@ -460,6 +591,16 @@ class ReplicaModel:
                 victim.req.generated = 0
                 victim.req.first_token_time = None
                 self.preemptions += 1
+                if self._obs is not None:
+                    if self._obs.trace is not None:
+                        kind = ("evict" if self.role == "decode"
+                                else "preempt")
+                        self._obs.trace.emit(
+                            kind, now + dt,
+                            request_id=victim.req.request_id,
+                            replica_id=self.replica_id)
+                    if self._obsh is not None:
+                        self._obsh.preempt.inc()
                 if self.role == "decode":
                     self.evicted.append(victim.req)  # needs a prefill replica
                 else:
@@ -489,13 +630,23 @@ class ReplicaModel:
                 rr = self.running.pop(i)
                 self._release(rr)
                 self._finish(rr.req, now + dt)
+        if self._obs is not None and dt > 0.0:
+            if self._obs.trace is not None:
+                self._obs.trace.emit("decode", now, -1, self.replica_id, dt,
+                                     {"batch": len(self.running),
+                                      "steps": steps})
+            if self._obsh is not None:
+                self._obsh.kv_occ.set(self.pool.utilization)
         return dt
 
     def _finish(self, req: Request, t: float) -> None:
         req.state = RequestState.FINISHED
         req.finish_time = t
+        req.terminal = TerminalState.FINISHED
         self.finished.append(req)
         self.tokens_out += req.generated
         if self.role != "prefill":
             self.served += 1
         self.sched.on_finish(req, t)
+        if self._obs is not None:
+            self._obs.finish(req, t, self.replica_id)

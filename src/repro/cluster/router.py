@@ -28,6 +28,10 @@ from ..core.partition import edge_divergence
 from ..kvplane.topology import PrefixFetch
 from .replica import ReplicaModel
 
+# Cost-term names on the traced route event, in ``_last_terms`` order.
+_TERM_KEYS = ("ahead", "contention", "resid", "decode_drag", "stalled",
+              "kv_occ", "own_prefill", "total")
+
 
 class Router:
     """Base router: pick a prefill-capable replica for a new request, and a
@@ -137,6 +141,20 @@ class EWSJFRouter(Router):
         self._align_memo: dict[int, tuple[tuple, int, float]] = {}
         # replica_id -> (scheduler version, {queue_id: (work, capped_work)})
         self._work_memo: dict[int, tuple[int, dict[int, tuple[float, float]]]] = {}
+        # Observability handle (obs.Observability), wired by the cluster
+        # simulator.  With obs on, ``select`` sets ``_stash_terms`` around
+        # its min() scan so ``route_cost`` drops each candidate's term
+        # breakdown into ``_terms_by_rep`` (a tuple build + dict store per
+        # candidate — far cheaper than recomputing the winner's cost) and
+        # the winner's row lands on the route event / cost histogram.
+        # With obs off the stash flag is a single false check and the
+        # min() fast path is untouched.  ``_route_h``/``_route_cost_h``
+        # cache pre-bound metric handles (wired once per run).
+        self.obs = None
+        self._stash_terms = False
+        self._terms_by_rep: dict[int, tuple] = {}
+        self._route_h: dict = {}
+        self._route_cost_h = None
 
     def select(self, replicas, req, now):
         """Minimum marginal-start-delay replica (see ``route_cost``); stamps
@@ -154,9 +172,39 @@ class EWSJFRouter(Router):
                                if k in live}
             self._align_memo = {k: v for k, v in self._align_memo.items()
                                 if k in live}
+        obs = self.obs
+        if obs is None:
+            best = min(pool, key=lambda r: (self.route_cost(r, req, now),
+                                            r.replica_id))
+            self._annotate_prefix(best, req)
+            return best
+        # Instrumented path: identical min() scan, with route_cost dropping
+        # each candidate's term tuple into _terms_by_rep on the way.
+        self._terms_by_rep.clear()
+        self._stash_terms = True
         best = min(pool, key=lambda r: (self.route_cost(r, req, now),
                                         r.replica_id))
+        self._stash_terms = False
         self._annotate_prefix(best, req)
+        terms = self._terms_by_rep.get(best.replica_id)
+        trace = obs.trace
+        if trace is not None:
+            data = (dict(zip(_TERM_KEYS, terms))
+                    if terms is not None else {})
+            data["n_pool"] = len(pool)
+            trace.emit("route", now, req.request_id, best.replica_id,
+                       0.0, data)
+        m = obs.metrics
+        if m is not None:
+            h = self._route_h.get(best.replica_id)
+            if h is None:
+                h = self._route_h[best.replica_id] = m.counter(
+                    "route_decisions_total", {"replica": best.replica_id})
+            h.inc()
+            if self._route_cost_h is None:
+                self._route_cost_h = m.hist("route_cost_seconds")
+            if terms is not None:
+                self._route_cost_h.observe(terms[7])
         return best
 
     # ---- KV plane (prefix reuse) ----------------------------------------
@@ -338,6 +386,10 @@ class EWSJFRouter(Router):
         # 6) KV plane: the request's own (suffix-only) prefill cost + any
         #    planned remote-fetch exposure — the replica-dependent term
         #    that steers toward prefix holders (0.0 when inactive).
+        if self._stash_terms:
+            self._terms_by_rep[replica.replica_id] = (
+                ahead, contention, resid, decode_drag, stalled, occ, own,
+                delay + own)
         return delay + own
 
 

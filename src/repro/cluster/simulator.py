@@ -27,7 +27,7 @@ import numpy as np
 
 from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler, FCFSScheduler
-from ..core.types import Request, RequestState
+from ..core.types import Request, RequestState, TerminalState
 from ..kvplane.directory import PrefixDirectory
 from ..kvplane.topology import LinkTopology
 from .admission import AdmissionController, classify_by_length
@@ -71,6 +71,14 @@ class ClusterSimResult:
     policy: dict = field(default_factory=dict)
     prefix: dict = field(default_factory=dict)   # KV plane (directory+caches)
     readmitted: int = 0
+    # Unified terminal accounting (TerminalState.value -> count) — the one
+    # outcome classification all planes agree on, derived from the
+    # ``Request.terminal`` stamps rather than per-component counters.
+    terminal: dict = field(default_factory=dict)
+    # Per-SLO-class latency percentiles (obs.slo.slo_report shape), filled
+    # when the run had a metrics registry; see ``slo_report()`` for the
+    # registry-free fallback.
+    slo: dict = field(default_factory=dict)
 
     @property
     def req_per_s(self) -> float:
@@ -110,6 +118,17 @@ class ClusterSimResult:
                             and r.prompt_len > short_threshold])
         return {"all": s(ttfts), "short": s(short), "long": s(longs)}
 
+    def slo_report(self, classify=None) -> dict:
+        """Per-class TTFT/TBT/E2E percentiles in the shared obs shape.
+        Returns the live-registry report when the run recorded one;
+        otherwise rebuilds it from the finished requests through the same
+        histogram code path (identical bucketing and bounds)."""
+        if self.slo:
+            return self.slo
+        from ..obs.slo import slo_from_requests
+        return slo_from_requests(self.finished,
+                                 classify or classify_by_length)
+
     def ttft_by_class(self, classify=None) -> dict:
         """Per-SLO-class TTFT stats (mean/p95/n) over finished requests."""
         from .admission import classify_by_length
@@ -134,11 +153,29 @@ class ClusterSimulator:
                  autoscaler: Optional[SLOBurnAutoscaler] = None,
                  policy_store: Optional[PolicyStore] = None,
                  topology: Optional[LinkTopology] = None,
-                 prefix_directory: Optional[PrefixDirectory] = None):
+                 prefix_directory: Optional[PrefixDirectory] = None,
+                 obs=None):
         self.replicas: list[ReplicaModel] = list(replicas)
         self.router = router
         self.cost = cost
         self.admission = admission
+        # Observability plane (obs.Observability or None).  One handle is
+        # threaded through every instrumented component; with None every
+        # emission site is a single attribute check and scheduling
+        # decisions are bit-identical to the uninstrumented simulator
+        # (equivalence-tested in tests/test_obs.py).
+        self.obs = obs
+        # per-SLO-class pre-bound arrival counter handles (hot ingest path)
+        self._arrived_h: dict = {}
+        if obs is not None:
+            if admission is not None:
+                # label SLO classes the way admission actually classifies
+                obs.classify = admission._classify
+                admission.obs = obs
+            if isinstance(router, EWSJFRouter):
+                router.obs = obs
+            for rep in self.replicas:
+                rep.obs = obs
         self.autoscaler = autoscaler
         self.policy_store = policy_store
         self.prefix_directory = prefix_directory
@@ -192,6 +229,7 @@ class ClusterSimulator:
         rep.last_heartbeat = self.now
         rep.topology = self.topology
         rep.peer_alive_fn = self._peer_alive
+        rep.obs = self.obs
         if self.admission is not None:
             rep.drop_fn = self.admission.expired
         # Warm start: a new replica inherits the fleet's learned policy
@@ -223,6 +261,16 @@ class ClusterSimulator:
         """Admission + routing for one arrival.  Returns False if not (yet)
         admitted — deferred requests park in the controller's re-admission
         queue and are re-offered by ``_pump_retries``."""
+        if self.obs is not None:
+            if self.obs.trace is not None:
+                self.obs.trace.emit("arrival", self.now, req.request_id)
+            if self.obs.metrics is not None:
+                cls = self.obs.slo_class(req)
+                h = self._arrived_h.get(cls)
+                if h is None:
+                    h = self._arrived_h[cls] = self.obs.metrics.counter(
+                        "requests_arrived_total", {"slo_class": cls})
+                h.inc()
         if self.admission is not None:
             rep, rid = self._replica_hint(req)
             est = (self.router.route_cost(rep, req, self.now)
@@ -290,6 +338,13 @@ class ClusterSimulator:
     # ---- control-plane reactions ------------------------------------------
 
     def _handle_failure(self, rep: ReplicaModel) -> None:
+        if self.obs is not None:
+            # flight-recorder dump: freeze the lifecycle ring at the
+            # moment of failure for post-mortem reconstruction
+            self.obs.dump(f"replica_{rep.replica_id}_failure", self.now)
+            self.obs.event("replica_fail", self.now,
+                           replica_id=rep.replica_id)
+            self.obs.inc("replica_failures_total")
         if self.policy_store is not None:
             self.policy_store.forget(rep.replica_id)
         if self.prefix_directory is not None:
@@ -301,6 +356,13 @@ class ClusterSimulator:
             self._route(req)
 
     def _handle_drain(self, rep: ReplicaModel) -> None:
+        if self.obs is not None:
+            # drains fire on straggler detection (and scale-down) — dump
+            # the ring so the slow replica's backlog is reconstructable
+            self.obs.dump(f"replica_{rep.replica_id}_drain", self.now)
+            self.obs.event("replica_drain", self.now,
+                           replica_id=rep.replica_id)
+            self.obs.inc("replica_drains_total")
         if self.policy_store is not None:
             self.policy_store.forget(rep.replica_id)
         if self.prefix_directory is not None:
@@ -331,6 +393,12 @@ class ClusterSimulator:
         self.policy_store.sync_fleet(
             ((rep.replica_id, rep.sched, self._class_delays(rep))
              for rep in self.replicas if rep.schedulable()), now)
+        if self.obs is not None:
+            st = self.policy_store.stats()
+            self.obs.gauge("policy_epoch", v=float(st.get("epoch", 0)))
+            self.obs.gauge("policy_stale_dropped",
+                           v=float(st.get("stale_dropped", 0)))
+            self.obs.gauge("policy_merges", v=float(st.get("merges", 0)))
 
     @staticmethod
     def _class_delays(rep: ReplicaModel, tail: int = 200) -> dict:
@@ -357,6 +425,7 @@ class ClusterSimulator:
         if self.autoscaler.role_aware:
             self.autoscaler.ingest_decode(
                 self.monitor.decode_samples(self.replicas))
+            self._obs_burn(now)
             for act, pool in self.autoscaler.decide_roles(self.replicas, now):
                 if act == "up":
                     rep = self.add_replica(self.autoscaler.make_scheduler(now),
@@ -370,7 +439,11 @@ class ClusterSimulator:
                         self._handle_drain(victim)
                         self.autoscaler.note_scaled("down", victim, now,
                                                     role=pool.role)
+                if self.obs is not None:
+                    self.obs.inc("autoscaler_actions_total",
+                                 {"action": act, "role": pool.role})
             return
+        self._obs_burn(now)
         act = self.autoscaler.decide(self.replicas, now)
         if act == "up":
             rep = self.add_replica(self.autoscaler.make_scheduler(now),
@@ -382,6 +455,20 @@ class ClusterSimulator:
             if victim is not None:
                 self._handle_drain(victim)
                 self.autoscaler.note_scaled("down", victim, now)
+        if act in ("up", "down") and self.obs is not None:
+            self.obs.inc("autoscaler_actions_total",
+                         {"action": act, "role": self.autoscaler.cfg.role})
+
+    def _obs_burn(self, now: float) -> None:
+        """Record the autoscaler's burn signals as gauges + timelines."""
+        if self.obs is None:
+            return
+        for cls, b in self.autoscaler.burn.items():
+            self.obs.gauge("autoscaler_burn", {"class": cls}, b)
+            self.obs.timeline("autoscaler_burn", now, b, {"class": cls})
+        db = self.autoscaler.decode_burn
+        self.obs.gauge("autoscaler_burn", {"class": "decode"}, db)
+        self.obs.timeline("autoscaler_burn", now, db, {"class": "decode"})
 
     def _admission_share_rates(self) -> dict[int, float]:
         """Per-replica rate signal for the admission budget-share split,
@@ -431,6 +518,15 @@ class ClusterSimulator:
                 dst = self.router.select_decode(self.replicas, h, self.now)
                 self.channel.send(h, self.now, dst.replica_id)
                 dst.accept_handoff(h, self.now)
+                if self.obs is not None:
+                    link = f"{h.src_replica}->{dst.replica_id}"
+                    self.obs.event("handoff", self.now,
+                                   request_id=h.req.request_id,
+                                   replica_id=dst.replica_id,
+                                   data={"src": h.src_replica,
+                                         "bytes": int(h.kv_bytes)})
+                    self.obs.inc("kv_handoff_bytes_total", {"link": link},
+                                 float(h.kv_bytes))
             while rep.evicted:
                 self._route(rep.evicted.pop(0))
 
@@ -543,11 +639,29 @@ class ClusterSimulator:
 
         finished = [r for rep in self.replicas for r in rep.finished]
         dropped = [r for rep in self.replicas for r in rep.dropped]
+        # Unified terminal accounting from the per-request stamps.  A shed
+        # request that never got stamped (admission-less shedding path)
+        # falls back to its list membership.
+        terminal: dict[str, int] = {}
+        for r in finished:
+            key = (r.terminal or TerminalState.FINISHED).value
+            terminal[key] = terminal.get(key, 0) + 1
+        for r in self.shed:
+            key = (r.terminal or TerminalState.SHED).value
+            terminal[key] = terminal.get(key, 0) + 1
+        for r in dropped:
+            key = (r.terminal or TerminalState.DEADLINE_DROPPED).value
+            terminal[key] = terminal.get(key, 0) + 1
+        replica_stats = [self._replica_stat(rep) for rep in self.replicas]
+        slo = {}
+        if self.obs is not None:
+            self._obs_final_sync(replica_stats)
+            slo = self.obs.slo_report()
         return ClusterSimResult(
             total_time=t, finished=finished, shed=list(self.shed),
             dropped=dropped, reenqueued=self.reenqueued,
             handoff_stats=self.channel.stats(),
-            replica_stats=[self._replica_stat(rep) for rep in self.replicas],
+            replica_stats=replica_stats,
             health={"failures": list(self.monitor.failures),
                     "stragglers": list(self.monitor.stragglers)},
             admission=(self.admission.stats() if self.admission is not None
@@ -557,7 +671,29 @@ class ClusterSimulator:
             policy=(self.policy_store.stats() if self.policy_store is not None
                     else {}),
             prefix=self._prefix_stats(),
-            readmitted=self.readmitted)
+            readmitted=self.readmitted,
+            terminal=terminal, slo=slo)
+
+    def _obs_final_sync(self, replica_stats: list[dict]) -> None:
+        """End-of-run registry sync for cumulative component counters that
+        have no natural mid-run emission point: radix cache totals,
+        replica-seconds, prefix-directory epoch."""
+        m = self.obs
+        for rep in self.replicas:
+            if rep.radix is not None:
+                st = rep.radix.stats()
+                lbl = {"replica": rep.replica_id}
+                m.gauge("kv_prefix_lookups", lbl, float(st.get("lookups", 0)))
+                m.gauge("kv_prefix_hit_blocks", lbl,
+                        float(st.get("hit_blocks", 0)))
+                m.gauge("kv_prefix_evicted", lbl, float(st.get("evicted", 0)))
+                m.gauge("kv_prefix_hit_rate", lbl,
+                        float(st.get("hit_rate", 0.0)))
+        m.gauge("replica_seconds_total",
+                v=sum(s.get("replica_seconds", 0.0) for s in replica_stats))
+        if self.prefix_directory is not None:
+            st = self.prefix_directory.stats()
+            m.gauge("prefix_directory_epoch", v=float(st.get("epoch", 0)))
 
     def _prefix_stats(self) -> dict:
         caches = {rep.replica_id: rep.radix.stats()

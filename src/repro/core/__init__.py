@@ -24,7 +24,7 @@ from .simulator import (EngineParams, ServingSimulator, SimResult,
                         WorkloadSpec, run_comparison, uniform_workload)
 from .types import (BatchPlan, MetaParams, QueueBounds, QueueSnapshot,
                     Request, RequestState, SchedulerPolicy, SchedulerSnapshot,
-                    ScoringWeights)
+                    ScoringWeights, TerminalState)
 
 __all__ = [
     "BatchBudget", "BatchBuilder", "DEFAULT_BUCKETS",
@@ -42,4 +42,5 @@ __all__ = [
     "run_comparison", "uniform_workload",
     "BatchPlan", "MetaParams", "QueueBounds", "QueueSnapshot", "Request",
     "RequestState", "SchedulerPolicy", "SchedulerSnapshot", "ScoringWeights",
+    "TerminalState",
 ]

@@ -24,6 +24,18 @@ class RequestState(Enum):
     FAILED = "failed"
 
 
+class TerminalState(Enum):
+    """How a request's life ended — the *one* classification every plane
+    agrees on.  Stamped exactly once (``Request.terminal``) at the point a
+    request leaves the system, recorded by the tracer and counted in the
+    metrics registry (``requests_terminal_total{state,slo_class}``), so
+    the per-component shed/dropped counters can no longer diverge."""
+
+    FINISHED = "finished"              # generated all tokens
+    SHED = "shed"                      # rejected by admission / load shedding
+    DEADLINE_DROPPED = "deadline_dropped"  # admitted, but missed its deadline
+
+
 @dataclass
 class Request:
     """One inference request as seen by the admission scheduler.
@@ -53,6 +65,11 @@ class Request:
 
     # Lifecycle bookkeeping (filled in by the engine / simulator).
     state: RequestState = RequestState.WAITING
+    terminal: Optional[TerminalState] = None  # stamped once, at exit
+    # SLO-class label cache, stamped by the observability plane on first
+    # classification (arrival) and reused at dispatch/finish so the label
+    # is computed once per request.  Never read by scheduling code.
+    slo_class: Optional[str] = None
     enqueue_time: float = 0.0               # when routed into a queue
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None

@@ -35,7 +35,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core.batch_builder import BatchBudget
 from ..core.scheduler import BaseScheduler
-from ..core.types import Request, RequestState
+from ..core.types import Request, RequestState, TerminalState
 from ..models.common import DtypePolicy
 from ..models.model import (_embed_inputs, _unembed, decode_step,
                             init_decode_caches, pad_prefill_caches)
@@ -73,7 +73,8 @@ class ServingEngine:
                  ecfg: EngineConfig | None = None,
                  policy: DtypePolicy | None = None,
                  admission=None, policy_store=None,
-                 replica_key: Optional[int] = None):
+                 replica_key: Optional[int] = None,
+                 obs=None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -94,6 +95,14 @@ class ServingEngine:
         # Replica-facing admission hook (cluster.AdmissionController or any
         # object with .admit(req, now, est_delay) -> decision.admitted).
         self.admission = admission
+        # Observability plane (obs.Observability or None) — same null-safe
+        # contract as the cluster simulator: every emission is guarded, so
+        # obs=None costs one attribute check per site.
+        self.obs = obs
+        if obs is not None and admission is not None:
+            admission.obs = obs
+            if hasattr(admission, "_classify"):
+                obs.classify = admission._classify
         # Fleet strategic plane (cluster.PolicyStore): engines sharing one
         # store publish their scheduler's strategic observations and adopt
         # the merged global policy — same publish→merge→broadcast loop as
@@ -167,6 +176,10 @@ class ServingEngine:
 
     def add_request(self, req: Request) -> None:
         now = self.now()
+        if self.obs is not None:
+            self.obs.event("arrival", now, request_id=req.request_id)
+            self.obs.inc("requests_arrived_total",
+                         {"slo_class": self.obs.classify(req)})
         if self.admission is not None:
             dec = self.admission.admit(req, now, self._est_queue_delay(now))
             if not dec.admitted:
@@ -176,9 +189,13 @@ class ServingEngine:
                 if dec.reason != "defer":
                     req.state = RequestState.FAILED
                     req.finish_time = now
+                    if req.terminal is None:    # duck-typed admission hooks
+                        req.terminal = TerminalState.SHED
                     self.shed.append(req)
                 return
         self.sched.submit(req, now=now)
+        if self.obs is not None:
+            self.obs.event("enqueue", now, request_id=req.request_id)
 
     def _pump_retries(self, now: float) -> None:
         if self.admission is None or not self.admission.retry_pending():
@@ -194,6 +211,8 @@ class ServingEngine:
             elif dec.reason != "defer":
                 req.state = RequestState.FAILED
                 req.finish_time = now
+                if req.terminal is None:
+                    req.terminal = TerminalState.SHED
                 self.shed.append(req)
 
     def run(self, requests: list[Request], max_steps: int = 100_000) -> list[Request]:
@@ -278,6 +297,10 @@ class ServingEngine:
             rate = int(lens.sum()) / max(t_first - t_pf0, 1e-6)
             self._prefill_tok_rate = (rate if self._prefill_tok_rate <= 0 else
                                       0.7 * self._prefill_tok_rate + 0.3 * rate)
+        if self.obs is not None:
+            self.obs.event("prefill", t_pf0, dur=max(t_first - t_pf0, 0.0),
+                           data={"batch": n, "bucket": bucket,
+                                 "tokens": int(lens.sum())})
         for i, r in enumerate(reqs):
             self.pool.allocate(r.request_id, r.prompt_len)
             slot = self.slots.acquire(r.request_id)
@@ -285,6 +308,14 @@ class ServingEngine:
             self._write_slot(slot, caches, i)
             r.state = RequestState.RUNNING_DECODE
             r.first_token_time = t_first
+            if self.obs is not None:
+                wait = max(0.0, t_pf0 - r.arrival_time)
+                self.obs.event("dispatch", t_pf0, request_id=r.request_id,
+                               data={"wait": round(wait, 6)})
+                self.obs.observe("sched_dispatch_wait_seconds", wait,
+                                 {"slo_class": self.obs.classify(r)})
+                self.obs.event("first_token", t_first,
+                               request_id=r.request_id)
             r.generated = 1
             self.slot_pos[slot] = r.prompt_len
             self.last_tokens[slot, 0] = first[i, 0]
@@ -361,6 +392,10 @@ class ServingEngine:
         req.first_token_time = None
         self.preemptions += 1
         self.sched.submit(req, now=self.now())
+        if self.obs is not None:
+            self.obs.event("preempt", self.now(),
+                           request_id=req.request_id)
+            self.obs.inc("preemptions_total", {"kind": "preempt"})
 
     def _finish_slot(self, slot: int) -> None:
         st = self.slot_state.pop(slot, None)
@@ -371,17 +406,28 @@ class ServingEngine:
         self.slots.release(slot)
         req.state = RequestState.FINISHED
         req.finish_time = self.now()
+        req.terminal = TerminalState.FINISHED
         self.finished.append(req)
         self.sched.on_finish(req, req.finish_time)
+        if self.obs is not None:
+            self.obs.finish(req, req.finish_time)
 
     # ---- stats ---------------------------------------------------------------
 
     def stats(self) -> dict:
         elapsed = self.now()
         toks = sum(r.generated for r in self.finished)
+        # unified terminal accounting (Request.terminal stamps)
+        terminal: dict[str, int] = {}
+        for r in self.finished + self.shed:
+            if r.terminal is not None:
+                terminal[r.terminal.value] = terminal.get(
+                    r.terminal.value, 0) + 1
         return {
             "finished": len(self.finished),
             "shed": len(self.shed),
+            "terminal": terminal,
+            "slo": (self.obs.slo_report() if self.obs is not None else {}),
             "readmitted": self.readmitted,
             "admission": (self.admission.stats()
                           if self.admission is not None else {}),

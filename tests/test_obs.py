@@ -1,0 +1,405 @@
+"""Observability plane: histograms, registry, tracer, SLO views, and the
+obs-on/off equivalence contract.
+
+The two load-bearing guarantees:
+
+* ``LogHistogram.percentile`` is within one log bucket of the exact
+  percentile (``exact <= estimate <= exact * growth``), and ``merge`` is
+  associative — shard-then-merge equals pooled observation.
+* Scheduling is *bit-identical* with the obs plane on vs off: the
+  instrumentation only reads state, so dispatch logs, finish times, and
+  routing decisions cannot move (property-tested over random workloads).
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_stub import given, settings, st
+
+from repro.cluster import ClusterSimulator, make_fleet, make_router
+from repro.cluster.admission import AdmissionController
+from repro.core import (CostModel, EWSJFConfig, EWSJFScheduler, Request,
+                        TerminalState, WorkloadSpec)
+from repro.obs import (DEFAULT_SPEC, FlightDump, HistogramSpec, LogHistogram,
+                       MetricsRegistry, Observability, TraceRecorder,
+                       classify_request, slo_from_requests, slo_report)
+
+
+def _exact_percentile(samples, p):
+    s = sorted(samples)
+    rank = max(1, math.ceil(p / 100.0 * len(s)))
+    return s[rank - 1]
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram: percentile bound + merge algebra
+# ---------------------------------------------------------------------------
+
+class TestLogHistogram:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.floats(min_value=1e-5, max_value=500.0),
+                    min_size=1, max_size=200))
+    def test_percentile_within_one_bucket_random(self, samples):
+        h = LogHistogram()
+        for v in samples:
+            h.observe(v)
+        for p in (50, 90, 95, 99):
+            exact = _exact_percentile(samples, p)
+            est = h.percentile(p)
+            if exact > h.spec.lo * h.spec.growth ** (h.spec.n_buckets - 1):
+                continue                  # overflow bucket: exact max instead
+            assert exact <= est * (1 + 1e-9)
+            assert est <= exact * h.spec.growth * (1 + 1e-9)
+
+    def test_percentile_adversarial_bucket_edges(self):
+        # Samples sitting exactly on bucket edges — the worst case for an
+        # upper-edge estimator (bisect_left puts an edge value in the
+        # bucket it closes, so the bound must still hold).
+        spec = DEFAULT_SPEC
+        edges = [spec.lo * spec.growth ** i for i in range(10)]
+        h = LogHistogram(spec)
+        for v in edges:
+            h.observe(v)
+        for p in (50, 95, 99):
+            exact = _exact_percentile(edges, p)
+            est = h.percentile(p)
+            assert exact <= est * (1 + 1e-9)
+            assert est <= exact * spec.growth * (1 + 1e-9)
+
+    def test_percentile_adversarial_all_one_bucket(self):
+        h = LogHistogram()
+        for _ in range(1000):
+            h.observe(0.001 * 1.01)       # all land in one bucket
+        est = h.percentile(99)
+        assert 0.001 <= est <= 0.001 * h.spec.growth * 1.02
+
+    def test_overflow_bucket_reports_exact_max(self):
+        h = LogHistogram()
+        top = h.spec.lo * h.spec.growth ** h.spec.n_buckets
+        h.observe(top * 100)
+        h.observe(top * 7)
+        assert h.percentile(99) == pytest.approx(top * 100)
+
+    def test_zero_and_negative_clamp(self):
+        h = LogHistogram()
+        h.observe(0.0)
+        h.observe(-5.0)
+        assert h.count == 2
+        assert h.percentile(50) == pytest.approx(h.spec.lo)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.floats(min_value=1e-5, max_value=500.0),
+                    min_size=3, max_size=120))
+    def test_merge_associative_and_equals_pooled(self, samples):
+        pooled = LogHistogram()
+        for v in samples:
+            pooled.observe(v)
+        # three shards, arbitrary split
+        shards = [LogHistogram() for _ in range(3)]
+        for i, v in enumerate(samples):
+            shards[i % 3].observe(v)
+        left = shards[0].copy().merge(shards[1]).merge(shards[2])
+        right = shards[0].copy().merge(shards[1].copy().merge(shards[2]))
+        for m in (left, right):
+            assert m.counts == pooled.counts
+            assert m.count == pooled.count
+            assert m.sum == pytest.approx(pooled.sum)
+            for p in (50, 95, 99):
+                assert m.percentile(p) == pooled.percentile(p)
+
+    def test_merge_spec_mismatch_raises(self):
+        a = LogHistogram()
+        b = LogHistogram(HistogramSpec(lo=1e-3, growth=3.0, n_buckets=10))
+        with pytest.raises(ValueError):
+            a.merge(b)
+
+    def test_mean_is_exact(self):
+        h = LogHistogram()
+        vals = [0.01, 0.5, 3.0, 7.25]
+        for v in vals:
+            h.observe(v)
+        assert h.mean == pytest.approx(sum(vals) / len(vals))
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry: labels, handles, merge, exposition
+# ---------------------------------------------------------------------------
+
+class TestMetricsRegistry:
+    def test_label_order_is_canonical(self):
+        m = MetricsRegistry()
+        m.inc("x_total", {"a": "1", "b": "2"})
+        m.inc("x_total", {"b": "2", "a": "1"})
+        assert m.counter_value("x_total", {"a": "1", "b": "2"}) == 2.0
+
+    def test_handles_alias_slow_path(self):
+        m = MetricsRegistry()
+        c = m.counter("req_total", {"cls": "a"})
+        c.inc()
+        m.inc("req_total", {"cls": "a"})
+        assert m.counter_value("req_total", {"cls": "a"}) == 2.0
+        g = m.gauge("depth", {"r": 0})
+        g.set(7.0)
+        m.set_gauge("depth", {"r": 0}, v=9.0)
+        h = m.hist("lat_seconds", {"cls": "a"})
+        h.observe(0.5)
+        m.observe("lat_seconds", 0.5, {"cls": "a"})
+        assert m.hist("lat_seconds", {"cls": "a"}).count == 2
+
+    def test_merge_registries(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.inc("n_total", {"k": "x"}, 2.0)
+        b.inc("n_total", {"k": "x"}, 3.0)
+        a.observe("h_seconds", 0.1)
+        b.observe("h_seconds", 10.0)
+        a.merge(b)
+        assert a.counter_value("n_total", {"k": "x"}) == 5.0
+        assert a.hist("h_seconds").count == 2
+
+    def test_prometheus_exposition(self):
+        m = MetricsRegistry()
+        m.inc("requests_total", {"slo_class": "interactive"}, 4)
+        m.set_gauge("queue_depth", {"replica": 0}, v=3.0)
+        m.observe("ttft_seconds", 0.25, {"slo_class": "interactive"})
+        text = m.render_prometheus()
+        assert 'requests_total{slo_class="interactive"} 4' in text
+        assert "# TYPE requests_total counter" in text
+        assert "# TYPE ttft_seconds histogram" in text
+        assert "ttft_seconds_count" in text
+        assert "ttft_seconds_bucket" in text
+        # le edges must be ascending and end at +Inf
+        assert 'le="+Inf"' in text
+
+    def test_snapshot_roundtrips_json(self):
+        m = MetricsRegistry()
+        m.inc("a_total")
+        m.observe("b_seconds", 1.0)
+        m.record_timeline("burn", 0.0, 0.5, {"class": "interactive"})
+        json.dumps(m.snapshot())          # must be JSON-able
+
+
+# ---------------------------------------------------------------------------
+# TraceRecorder: ring, flight dumps, exports
+# ---------------------------------------------------------------------------
+
+class TestTraceRecorder:
+    def test_ring_is_bounded_and_counts_emitted(self):
+        tr = TraceRecorder(capacity=8)
+        for i in range(20):
+            tr.emit("arrival", float(i), request_id=i)
+        s = tr.stats()
+        assert s["events_in_ring"] == 8
+        assert s["events_emitted"] == 20
+
+    def test_request_events_ordered_and_deduped_across_dumps(self):
+        tr = TraceRecorder(capacity=64)
+        tr.emit("arrival", 1.0, request_id=5)
+        tr.emit("dispatch", 2.0, request_id=5, replica_id=1)
+        d = tr.dump("failure", 2.5)
+        assert isinstance(d, FlightDump)
+        tr.emit("finish", 3.0, request_id=5, replica_id=1)
+        evs = tr.request_events(5)
+        assert [e.kind for e in evs] == ["arrival", "dispatch", "finish"]
+        assert all(evs[i].t <= evs[i + 1].t for i in range(len(evs) - 1))
+
+    def test_stage_breakdown(self):
+        tr = TraceRecorder()
+        tr.emit("arrival", 0.0, request_id=1)
+        tr.emit("dispatch", 1.0, request_id=1)
+        tr.emit("first_token", 1.5, request_id=1)
+        tr.emit("finish", 4.0, request_id=1)
+        br = tr.stage_breakdown(1)
+        assert br == {"wait": 1.0, "prefill": 0.5, "decode": 2.5,
+                      "total": 4.0}
+
+    def test_postmortem_renders(self):
+        tr = TraceRecorder()
+        tr.emit("arrival", 0.0, request_id=9)
+        tr.emit("shed", 0.1, request_id=9, data={"reason": "budget"})
+        text = tr.postmortem(9)
+        assert "request 9" in text and "shed" in text and "budget" in text
+        assert "no events" in tr.postmortem(12345)
+
+    def test_chrome_trace_shape(self):
+        tr = TraceRecorder()
+        tr.emit("dispatch", 1.0, request_id=3, replica_id=2)
+        tr.emit("prefill", 1.0, replica_id=2, dur=0.25,
+                data={"batch": 4})
+        doc = tr.to_chrome_trace()
+        evs = doc["traceEvents"]
+        span = next(e for e in evs if e.get("ph") == "X")
+        inst = next(e for e in evs if e.get("ph") == "i")
+        meta = [e for e in evs if e.get("ph") == "M"]
+        assert span["dur"] == pytest.approx(0.25e6)   # µs
+        assert span["pid"] == 2
+        assert inst["tid"] == 3
+        assert inst["args"]["request_id"] == 3
+        assert any(m["args"]["name"] == "replica 2" for m in meta)
+        json.dumps(doc)
+
+    def test_max_dumps_bounded(self):
+        tr = TraceRecorder(max_dumps=2)
+        for i in range(5):
+            tr.dump(f"r{i}", float(i))
+        assert len(tr.dumps) == 2
+        assert tr.dumps[-1].reason == "r4"
+
+
+# ---------------------------------------------------------------------------
+# SLO views + terminal states
+# ---------------------------------------------------------------------------
+
+class TestSLOViews:
+    def test_classify_fallback(self):
+        assert classify_request(Request(prompt_len=100)) == "interactive"
+        assert classify_request(Request(prompt_len=1000)) == "standard"
+        assert classify_request(
+            Request(prompt_len=50, priority_class=-1)) == "batch"
+
+    def test_slo_report_from_finish(self):
+        obs = Observability.enabled()
+        for i in range(20):
+            r = Request(prompt_len=100 if i % 2 else 1000, arrival_time=0.0)
+            r.first_token_time = 0.5 + i * 0.01
+            r.finish_time = 2.0 + i * 0.01
+            r.generated = 10
+            obs.finish(r, r.finish_time)
+        rep = slo_report(obs.metrics)
+        assert set(rep) >= {"interactive", "standard", "_all"}
+        row = rep["interactive"]["ttft"]
+        assert row["n"] == 10
+        assert row["p50"] <= row["p95"] <= row["p99"]
+        assert rep["_all"]["ttft"]["n"] == 20
+
+    def test_slo_from_requests_bridge(self):
+        reqs = []
+        for i in range(10):
+            r = Request(prompt_len=64, arrival_time=0.0)
+            r.first_token_time = 0.1 * (i + 1)
+            r.finish_time = 1.0
+            r.generated = 5
+            reqs.append(r)
+        view = slo_from_requests(reqs)
+        assert view["interactive"]["ttft"]["n"] == 10
+
+    def test_terminal_state_single_enum(self):
+        r = Request(prompt_len=10)
+        assert r.terminal is None
+        r.terminal = TerminalState.SHED
+        assert r.terminal.value == "shed"
+        assert {s.value for s in TerminalState} == {
+            "finished", "shed", "deadline_dropped"}
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: obs on/off must not move a single scheduling decision
+# ---------------------------------------------------------------------------
+
+def _run_cluster(workload, obs, with_admission=False):
+    cost = CostModel()
+    fleet = make_fleet(3, cost, scheduler_factory=lambda: EWSJFScheduler(
+        EWSJFConfig(max_queues=8)))
+    admission = AdmissionController() if with_admission else None
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           admission=admission, obs=obs)
+    res = sim.run(copy.deepcopy(workload))
+    logs = tuple(tuple((r.request_id, round(w, 12))
+                       for r, w in rep.dispatch_log)
+                 for rep in sim.replicas)
+    fins = tuple(sorted((r.request_id, r.finish_time, r.first_token_time)
+                        for r in res.finished))
+    return logs, fins
+
+
+class TestEquivalence:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_dispatch_logs_identical_with_obs_on(self, seed):
+        workload = WorkloadSpec(n_requests=60, arrival_rate=25.0,
+                                seed=seed).generate()
+        off = _run_cluster(workload, None)
+        on = _run_cluster(workload, Observability.enabled())
+        assert off == on
+
+    def test_trace_only_and_metrics_only_also_identical(self):
+        workload = WorkloadSpec(n_requests=80, arrival_rate=30.0,
+                                seed=3).generate()
+        off = _run_cluster(workload, None)
+        assert off == _run_cluster(workload,
+                                   Observability(trace=TraceRecorder()))
+        assert off == _run_cluster(workload,
+                                   Observability(metrics=MetricsRegistry()))
+
+    def test_equivalence_with_admission(self):
+        workload = WorkloadSpec(n_requests=80, arrival_rate=40.0,
+                                seed=5).generate()
+        off = _run_cluster(workload, None, with_admission=True)
+        on = _run_cluster(workload, Observability.enabled(),
+                          with_admission=True)
+        assert off == on
+
+    def test_slo_report_matches_ground_truth(self):
+        # The registry-side percentiles must agree with recomputing from
+        # the finished requests (same classifier, same histogram spec).
+        workload = WorkloadSpec(n_requests=100, arrival_rate=25.0,
+                                seed=9).generate()
+        cost = CostModel()
+        fleet = make_fleet(3, cost, scheduler_factory=lambda: EWSJFScheduler(
+            EWSJFConfig(max_queues=8)))
+        obs = Observability.enabled()
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                               obs=obs)
+        res = sim.run(copy.deepcopy(workload))
+        live = slo_report(obs.metrics)
+        recomputed = slo_from_requests(res.finished)
+        for cls, view in recomputed.items():
+            if "ttft" not in view:
+                continue
+            assert live[cls]["ttft"]["n"] == view["ttft"]["n"]
+            assert live[cls]["ttft"]["p95"] == pytest.approx(
+                view["ttft"]["p95"])
+            assert live[cls]["ttft"]["mean"] == pytest.approx(
+                view["ttft"]["mean"])
+
+    def test_cluster_result_slo_report_lazy_fallback(self):
+        workload = WorkloadSpec(n_requests=40, arrival_rate=25.0,
+                                seed=2).generate()
+        cost = CostModel()
+        fleet = make_fleet(2, cost, scheduler_factory=lambda: EWSJFScheduler(
+            EWSJFConfig(max_queues=8)))
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost)
+        res = sim.run(copy.deepcopy(workload))     # no obs wired
+        rep = res.slo_report()
+        assert rep and any("ttft" in v for v in rep.values())
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder on failure
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_failure_dumps_ring(self):
+        from repro.cluster.simulator import ScenarioEvent
+        workload = WorkloadSpec(n_requests=60, arrival_rate=30.0,
+                                seed=4).generate()
+        cost = CostModel()
+        fleet = make_fleet(3, cost, scheduler_factory=lambda: EWSJFScheduler(
+            EWSJFConfig(max_queues=8)))
+        obs = Observability.enabled()
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                               obs=obs)
+        t_fail = workload[20].arrival_time
+        sim.run(copy.deepcopy(workload),
+                scenario=[ScenarioEvent(time=t_fail, action="fail",
+                                        replica_id=0)])
+        assert obs.trace.dumps, "failure must freeze a flight dump"
+        d = obs.trace.dumps[0]
+        assert "failure" in d.reason and d.events
