@@ -39,11 +39,11 @@ def main(argv=None) -> None:
         os.environ.setdefault("BENCH_SCALE", "0.01")
 
     from . import (bench_cluster_routing, bench_kernels, bench_meta_optimizer,
-                   bench_padding, bench_policy_store, bench_prefix_cache,
-                   bench_role_autoscaler, bench_scheduler_overhead,
-                   bench_table3_queue_count, bench_table10_summary,
-                   bench_tables4to7_load, bench_tables8to9_regimes,
-                   bench_ttft_starvation)
+                   bench_padding, bench_policy_store, bench_predicted_length,
+                   bench_prefix_cache, bench_role_autoscaler,
+                   bench_scheduler_overhead, bench_table3_queue_count,
+                   bench_table10_summary, bench_tables4to7_load,
+                   bench_tables8to9_regimes, bench_ttft_starvation)
     sections = [
         ("table3_queue_count", "Table 3 (queue count)",
          bench_table3_queue_count.main),
@@ -67,6 +67,9 @@ def main(argv=None) -> None:
          lambda: bench_prefix_cache.main(quick=args.quick)),
         ("role_autoscaler", "Role-aware disagg autoscaling (beyond-paper)",
          lambda: bench_role_autoscaler.main(quick=args.quick)),
+        ("predicted_length", "Predicted-length scheduling plane "
+         "(beyond-paper)",
+         lambda: bench_predicted_length.main(quick=args.quick)),
         ("kernels", "Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()

@@ -93,6 +93,15 @@ class AdmissionConfig:
     # only seeds the buckets until the first measurement lands.
     adaptive_refill: bool = False
     refill_headroom: float = 1.0     # measured rate × headroom = budget rate
+    # --- decode-burn shed (prediction plane) ---
+    # When the fleet's *predicted* inter-token delay (worst decode-capable
+    # replica, from predicted remaining work — see
+    # ``ClusterSimulator._predicted_tbt``) exceeds
+    # ``tbt_shed_factor × tbt_budget``, sheddable classes are shed/deferred
+    # directly, instead of waiting for the decode burn to surface in
+    # queue-delay estimates.  0 disables (default: off, bit-identical).
+    tbt_budget: float = 0.0          # seconds of acceptable TBT
+    tbt_shed_factor: float = 1.0
     # --- per-replica budget shares (ROADMAP gap) ---
     # Split every class's refill across replicas proportional to their
     # measured ``tokens_out`` EWMAs (``set_replica_rates``, fed by the
@@ -150,6 +159,12 @@ class AdmissionController:
         self.deferred: dict[str, int] = {n: 0 for n in names}
         self.readmitted: dict[str, int] = {n: 0 for n in names}
         self.budget_denied: dict[str, int] = {n: 0 for n in names}
+        self.tbt_denied: dict[str, int] = {n: 0 for n in names}
+        # Decode-pressure oracle (prediction plane), wired by the cluster
+        # simulator: () -> predicted fleet TBT in seconds, or None when no
+        # predictor / no prediction stamps exist (the check then no-ops, so
+        # predictor-off is bit-identical).
+        self.decode_pressure_fn: Optional[Callable[[], Optional[float]]] = None
         # re-admission queue (bounded) + ids currently/ever deferred
         self._retry_q: deque[_RetryEntry] = deque()
         self._deferred_ids: set[int] = set()
@@ -243,8 +258,14 @@ class AdmissionController:
     @staticmethod
     def _token_cost(req: Request) -> float:
         # Effective length (KV plane): a cached prefix costs no prefill
-        # budget.  Identical to prompt_len when cached_len is 0.
-        return float(req.effective_len + req.max_new_tokens)
+        # budget.  Output side is the *predicted* token count when a
+        # prediction is stamped (prediction plane) — a request predicted to
+        # decode 1k tokens charges its class budget accordingly instead of
+        # hiding behind max_new_tokens defaults.  Identical to
+        # prompt_len + max_new_tokens when neither plane stamped it.
+        out = (req.predicted_output if req.predicted_output is not None
+               else float(req.max_new_tokens))
+        return float(req.effective_len + out)
 
     def _refill(self, now: float) -> None:
         dt = now - self._bucket_t
@@ -294,6 +315,17 @@ class AdmissionController:
                 self.replica_denied[replica_id] = \
                     self.replica_denied.get(replica_id, 0) + 1
                 return self._reject(req, slo, now, est_delay, "budget")
+        # 1b) Decode-burn shed (prediction plane): when the fleet's
+        #     *predicted* TBT already burns the budget, refuse sheddable
+        #     work now — admitting it would join a decode pool predicted to
+        #     stall, which queue-delay estimates only discover later.
+        if (slo.sheddable and self.cfg.tbt_budget > 0
+                and self.decode_pressure_fn is not None):
+            tbt = self.decode_pressure_fn()
+            if (tbt is not None
+                    and tbt > self.cfg.tbt_shed_factor * self.cfg.tbt_budget):
+                self.tbt_denied[slo.name] += 1
+                return self._reject(req, slo, now, est_delay, "decode_burn")
         # 2) SLO feasibility shed.
         if slo.sheddable and est_delay > self.cfg.shed_factor * slo.ttft_target:
             return self._reject(req, slo, now, est_delay, "shed")
@@ -349,7 +381,8 @@ class AdmissionController:
         # as a permanent shed.
         req.terminal = TerminalState.SHED
         if self.obs is not None:
-            decision = "budget_deny" if why == "budget" else "shed"
+            decision = {"budget": "budget_deny",
+                        "decode_burn": "decode_burn_deny"}.get(why, "shed")
             self.obs.inc("admission_decisions_total",
                          {"decision": decision, "slo_class": slo.name})
             self.obs.inc("requests_terminal_total",
@@ -421,6 +454,7 @@ class AdmissionController:
                 "deferred": dict(self.deferred),
                 "readmitted": dict(self.readmitted),
                 "budget_denied": dict(self.budget_denied),
+                "tbt_denied": dict(self.tbt_denied),
                 "budget_rate": self._budget_rate,
                 "replica_shares": dict(self._rep_share),
                 "replica_denied": dict(self.replica_denied),

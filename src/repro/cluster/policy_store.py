@@ -76,6 +76,8 @@ class ReplicaObservation:
     edges: list = field(default_factory=list)    # installed interior edges
     max_queues: int = 32                         # replica's configured budget
     class_delays: dict = field(default_factory=dict)  # name -> (mean_wait, n)
+    predictor: Optional[dict] = None             # length-posterior export
+                                                 # (repro.predict state dict)
 
 
 @dataclass
@@ -94,6 +96,11 @@ class GlobalPolicy:
     n_replicas: int                              # contributing replicas
     built_at: float = 0.0
     class_delays: dict = field(default_factory=dict)
+    # Pooled fleet output-length posterior (prediction plane).  Like
+    # ``trials``, it rides *outside* the epoch: refreshed in place on
+    # structurally-stable merge rounds and pushed to replicas through the
+    # rev-guarded ``_absorb_predictor`` path, never forcing a reinstall.
+    predictor_state: Optional[dict] = None
 
 
 class PolicyStore:
@@ -114,6 +121,8 @@ class PolicyStore:
         self._next_issued_key = -1                # auto keys for sync parties
         self._round = 0                           # merge rounds (staleness clock)
         self.trials_rev = 0                       # bumped when pooled trials change
+        self.predictor_rev = 0                    # bumped when pooled length-
+                                                  # posterior changes
         self.merges = 0
         self.publishes = 0
         self.stale_dropped = 0
@@ -147,6 +156,7 @@ class PolicyStore:
         pol = self._policy
         if pol is None or not hasattr(sched, "adopt_global_policy"):
             return False
+        self._absorb_predictor(sched)
         behind = sched.adopted_epoch < pol.epoch
         drifted = (sched.adopted_epoch == pol.epoch
                    and getattr(sched, "reopt_count", 0)
@@ -181,7 +191,24 @@ class PolicyStore:
             return False
         sched.warm_start_from(pol.boundaries, pol.meta, trials=pol.trials,
                               now=now, epoch=pol.epoch)
+        self._absorb_predictor(sched)
         return True
+
+    def _absorb_predictor(self, sched) -> None:
+        """Push the pooled fleet length-posterior into one scheduler's
+        predictor.  Rev-guarded **on the predictor object** (not the
+        scheduler): the cluster simulator threads one shared predictor
+        through every replica, and re-merging the same global state per
+        scheduler would re-pool identical samples into the bounded windows
+        once per replica instead of once per revision."""
+        pol = self._policy
+        pred = getattr(sched, "predictor", None)
+        if pol is None or pol.predictor_state is None or pred is None:
+            return
+        if getattr(pred, "_pred_rev_seen", -1) == self.predictor_rev:
+            return
+        pred.merge_state(pol.predictor_state)
+        pred._pred_rev_seen = self.predictor_rev
 
     def _publish_from(self, sched, replica_id: int, now: float,
                       class_delays: Optional[dict]) -> None:
@@ -303,6 +330,23 @@ class PolicyStore:
             (t for obs in fresh for t in obs.trials),
             self.cfg.trial_cap)
 
+        # Pooled length posterior (prediction plane): union the fresh
+        # replicas' empirical predictor exports with the previous global
+        # state, so decode-length knowledge survives replica churn the same
+        # way the Θ posterior does.  Import is deferred — the predict
+        # package is optional for stores serving predictor-less fleets.
+        pred_states = [obs.predictor for obs in fresh if obs.predictor]
+        if self._policy is not None and self._policy.predictor_state:
+            pred_states.append(self._policy.predictor_state)
+        if pred_states:
+            from ..predict import merge_states
+            pred_state: Optional[dict] = merge_states(pred_states)
+        else:
+            pred_state = None
+        pred_changed = (pred_state is not None
+                        and (self._policy is None
+                             or pred_state != self._policy.predictor_state))
+
         # Global queue budget: the tightest configured budget in the fleet
         # (trials carry only the 7 scoring dims, so the budget must come
         # from the replicas' configs — defaulting would silently override
@@ -337,6 +381,9 @@ class PolicyStore:
             if trials != self._policy.trials:
                 self._policy.trials = trials
                 self.trials_rev += 1
+            if pred_changed:
+                self._policy.predictor_state = pred_state
+                self.predictor_rev += 1
             self._policy.n_replicas = len(fresh)
             self._policy.n_samples = int(min(self.cfg.pooled_cap,
                                              sum(len(p) for p in pools)))
@@ -348,8 +395,11 @@ class PolicyStore:
             n_samples=int(min(self.cfg.pooled_cap,
                               sum(len(p) for p in pools))),
             n_replicas=len(fresh), built_at=now,
-            class_delays=self._merge_class_delays(fresh))
+            class_delays=self._merge_class_delays(fresh),
+            predictor_state=pred_state)
         self.trials_rev += 1
+        if pred_changed:
+            self.predictor_rev += 1
         return self._policy
 
     def _changed(self, boundaries, meta) -> bool:
@@ -423,4 +473,5 @@ class PolicyStore:
                 "n_queues": len(pol.boundaries) if pol else 0,
                 "n_trials": len(pol.trials) if pol else 0,
                 "n_replicas": pol.n_replicas if pol else 0,
+                "predictor_rev": self.predictor_rev,
                 "edge_divergence": self.edge_divergence}

@@ -178,6 +178,13 @@ class ReplicaModel:
         # once) so per-tick recording stays within the overhead contract.
         self._obs = None
         self._obsh: Optional[_ObsHandles] = None
+        # Output-length predictor (repro.predict), wired by the cluster
+        # simulator.  Used for preemption-victim selection and predicted
+        # decode-drag costing; fed true output lengths at finish.  Every
+        # consumer falls back to the length-blind arithmetic when the
+        # predictor is absent or abstained on the requests involved, so
+        # predictor=None stays bit-identical.
+        self.predictor = None
 
     # ---- observability wiring --------------------------------------------
 
@@ -266,6 +273,62 @@ class ReplicaModel:
                    * self.cost.decode_step_time(1, h.kv_tokens)
                    for h in self.inbox)
         return (queued + decode + pend) / max(self.speed, 1e-6)
+
+    def _predicted_batch(self) -> Optional[tuple[int, int, float]]:
+        """(batch size, current KV tokens, predicted total remaining
+        tokens) for the decode batch (running + inbox), using the wired
+        predictor's remaining-work posterior for stamped requests and the
+        ``max_new_tokens`` residual for unstamped ones.  None — consumers
+        fall back to length-blind formulas — when no predictor is wired or
+        no request in the batch carries a prediction stamp (abstain ≡
+        off)."""
+        if self.predictor is None:
+            return None
+        rems: list[float] = []
+        kv = 0
+        stamped = False
+        for item in list(self.running) + list(self.inbox):
+            kv += item.kv_tokens
+            req = item.req
+            if req.predicted_output is not None:
+                stamped = True
+                rems.append(self.predictor.remaining_work(req,
+                                                          req.generated))
+            else:
+                rems.append(float(max(req.max_new_tokens
+                                      - req.generated, 0)))
+        if not stamped or not rems:
+            return None
+        return len(rems), kv, float(sum(rems))
+
+    def predicted_decode_seconds(self) -> Optional[float]:
+        """Predicted seconds to drain the decode batch (running + inbox),
+        batch-amortized: total predicted remaining tokens divided by the
+        batch size, times the decode step time at the batch's mid-drain KV
+        footprint, at this replica's speed.  This is the *predicted
+        KV-seconds* signal decode placement and admission charge.  None
+        under ``_predicted_batch``'s abstain conditions."""
+        pb = self._predicted_batch()
+        if pb is None:
+            return None
+        b, kv, total = pb
+        step = self.cost.decode_step_time(b, int(kv + total / 2.0))
+        return (total / b) * step / max(self.speed, 1e-6)
+
+    def predicted_step_seconds(self) -> Optional[float]:
+        """Predicted per-step decode time (TBT) at the batch's mid-drain
+        KV footprint, at this replica's speed.  The near-term interference
+        signal: what one more decode step costs anything sharing this
+        executor.  Same abstain conditions as
+        ``predicted_decode_seconds``; unlike it, this does *not* scale
+        with remaining tokens — prefill routing charges a bounded number
+        of steps of drag, not the whole drain."""
+        pb = self._predicted_batch()
+        if pb is None:
+            return None
+        b, kv, total = pb
+        step = self.cost.decode_step_time(b, int(kv + total / 2.0))
+        return step / max(self.speed, 1e-6)
 
     def has_work(self) -> bool:
         """Anything running, queued, or pending in the handoff inbox."""
@@ -574,6 +637,23 @@ class ReplicaModel:
                 self.running.append(_Running(r, kv, rem, pin_node=pin_node))
         return dt
 
+    def _victim_index(self) -> int:
+        """Index into ``self.running`` of the preemption victim: the
+        stamped request with the largest predicted remaining work (ties →
+        the later arrival, preserving the LIFO flavor).  −1 (the LIFO
+        victim) when no predictor is wired or nothing is stamped."""
+        if self.predictor is None:
+            return -1
+        best, besti, found = -1.0, -1, False
+        for i, rr in enumerate(self.running):
+            if rr.req.predicted_output is None:
+                continue
+            found = True
+            rem = self.predictor.remaining_work(rr.req, rr.req.generated)
+            if rem >= best:
+                best, besti = rem, i
+        return besti if found else -1
+
     def _decode_tick(self, now: float) -> float:
         dt = 0.0
         steps = 0
@@ -584,7 +664,11 @@ class ReplicaModel:
             need = sum(1 for rr in self.running
                        if (rr.kv_tokens % self.p.block_size) == 0)
             while need > self.free_blocks and len(self.running) > 1:
-                victim = self.running.pop()          # LIFO recompute
+                # Victim selection: with prediction stamps, demote the
+                # request with the largest expected *remaining* work
+                # (Gittins-style — it holds KV longest for the least
+                # near-term completion); otherwise LIFO recompute.
+                victim = self.running.pop(self._victim_index())
                 self._release(victim)
                 victim.req.state = RequestState.PREEMPTED
                 victim.req.preemptions += 1
@@ -648,5 +732,7 @@ class ReplicaModel:
         if self.role != "prefill":
             self.served += 1
         self.sched.on_finish(req, t)
+        if self.predictor is not None:
+            self.predictor.observe(req, t)
         if self._obs is not None:
             self._obs.finish(req, t, self.replica_id)

@@ -55,6 +55,19 @@ class Router:
         pool = [r for r in replicas if r.accepts_decode()]
         if not pool:
             return None
+        # Prediction plane: when every candidate can price its decode
+        # batch in predicted KV-seconds (predictor wired + stamps present),
+        # balance on that — a replica with few-but-long decodes stops
+        # looking cheaper than one with many-but-short.  Any candidate
+        # without the signal (no predictor / all abstained) drops the whole
+        # pool back to the length-blind count, keeping the comparison
+        # unit-coherent and predictor-off bit-identical.
+        pds = [r.predicted_decode_seconds() for r in pool]
+        if all(p is not None for p in pds):
+            by_id = {r.replica_id: p for r, p in zip(pool, pds)}
+            return min(pool, key=lambda r: (r.kv_occupancy(),
+                                            by_id[r.replica_id],
+                                            r.replica_id))
         return min(pool, key=lambda r: (r.kv_occupancy(),
                                         (r.inflight() + len(r.inbox))
                                         / max(r.speed, 1e-6),
@@ -338,7 +351,12 @@ class EWSJFRouter(Router):
                    / max(replica.speed, 1e-6)) + exposed
         snap = replica.scheduler_snapshot(now, fresh=not self.use_cache)
         works = self._queue_works(replica, snap)
-        mine = snap.queue_for(L)
+        # Prediction plane: queue lookup happens in *work-length* space —
+        # the per-replica scheduler queues stamped requests by work_len, so
+        # the router must ask about the queue the request will actually
+        # join.  Unstamped requests look up at L exactly as before.
+        extra = req.predicted_extra if req.predicted_extra is not None else 0.0
+        mine = snap.queue_for(L + extra)
 
         # 1) FIFO work ahead of us inside our own interval queue.
         ahead = works[mine.queue_id][0] if mine is not None else 0.0
@@ -357,10 +375,22 @@ class EWSJFRouter(Router):
             contention += share * works[q.queue_id][1]
 
         # 3) Executor state: residual of the running step + decode drag.
+        #    The drag charges ~one step per in-flight decode (near-term
+        #    interference with *this* prefill's start), NOT the batch's
+        #    full drain time — a replica holding one long decode must not
+        #    look radioactive to prefill routing (the drain signal belongs
+        #    to decode placement / admission, see select_decode).  With
+        #    prediction stamps the per-step time is priced at the batch's
+        #    predicted mid-drain KV footprint; the occupancy-based guess
+        #    otherwise (abstain ≡ off).
         resid = replica.exec_residual(now)
-        decode_drag = replica.inflight() * self.cost.decode_step_time(
-            max(replica.inflight(), 1),
-            max(replica.inflight(), 1) * max(L, 1.0))
+        pstep = replica.predicted_step_seconds()
+        if pstep is not None:
+            decode_drag = replica.inflight() * pstep
+        else:
+            decode_drag = replica.inflight() * self.cost.decode_step_time(
+                max(replica.inflight(), 1),
+                max(replica.inflight(), 1) * max(L, 1.0))
 
         # 3b) Disaggregated backlog: handoffs parked in a prefill replica's
         #     outbox are finished prefills the decode pool could not absorb

@@ -154,11 +154,26 @@ class ClusterSimulator:
                  policy_store: Optional[PolicyStore] = None,
                  topology: Optional[LinkTopology] = None,
                  prefix_directory: Optional[PrefixDirectory] = None,
-                 obs=None):
+                 obs=None, predictor=None):
         self.replicas: list[ReplicaModel] = list(replicas)
         self.router = router
         self.cost = cost
         self.admission = admission
+        # Prediction plane (repro.predict.LengthPredictor or None).  One
+        # shared predictor is threaded through ingest (requests stamped
+        # *before* admission and routing see them), every replica (victim
+        # selection, decode costing, observe-at-finish), every scheduler
+        # (policy-store posterior export), and admission's decode-pressure
+        # oracle.  None — or a predictor that abstains — leaves every
+        # decision bit-identical to the length-blind simulator.
+        self.predictor = predictor
+        if predictor is not None:
+            for rep in self.replicas:
+                rep.predictor = predictor
+                rep.sched.predictor = predictor
+            if admission is not None \
+                    and admission.decode_pressure_fn is None:
+                admission.decode_pressure_fn = self._predicted_tbt
         # Observability plane (obs.Observability or None).  One handle is
         # threaded through every instrumented component; with None every
         # emission site is a single attribute check and scheduling
@@ -230,6 +245,9 @@ class ClusterSimulator:
         rep.topology = self.topology
         rep.peer_alive_fn = self._peer_alive
         rep.obs = self.obs
+        if self.predictor is not None:
+            rep.predictor = self.predictor
+            scheduler.predictor = self.predictor
         if self.admission is not None:
             rep.drop_fn = self.admission.expired
         # Warm start: a new replica inherits the fleet's learned policy
@@ -261,6 +279,14 @@ class ClusterSimulator:
         """Admission + routing for one arrival.  Returns False if not (yet)
         admitted — deferred requests park in the controller's re-admission
         queue and are re-offered by ``_pump_retries``."""
+        if self.predictor is not None:
+            # Stamp predicted_output / predicted_extra before admission or
+            # routing read the request: admission charges predicted tokens,
+            # the router looks up queues in work-length space, and the
+            # scheduler queues by work_len.  Runs before the router's
+            # prefix annotation, so the stamp is decode-side-only and
+            # composes with the later cached_len discount.
+            self.predictor.annotate(req, self.now)
         if self.obs is not None:
             if self.obs.trace is not None:
                 self.obs.trace.emit("arrival", self.now, req.request_id)
@@ -288,6 +314,22 @@ class ClusterSimulator:
                 return True
         self._route(req)
         return True
+
+    def _predicted_tbt(self) -> Optional[float]:
+        """Predicted fleet inter-token delay: the worst decode-capable
+        replica's step time at its *mid-drain* predicted KV footprint
+        (current KV plus half the predicted remaining tokens), at that
+        replica's speed.  The admission controller's decode-pressure
+        oracle.  Returns None — the decode-burn check no-ops — when no
+        decode batch carries a prediction stamp."""
+        worst: Optional[float] = None
+        for r in self.replicas:
+            if not r.accepts_decode():
+                continue
+            tbt = r.predicted_step_seconds()
+            if tbt is not None and (worst is None or tbt > worst):
+                worst = tbt
+        return worst
 
     def _peer_alive(self, replica_id: int) -> bool:
         """Liveness oracle for replicas' remote-prefix fetches: a fetch plan

@@ -57,10 +57,12 @@ class Monitor:
     # ---- ingestion ------------------------------------------------------
 
     def observe_arrival(self, req: Request) -> None:
-        # The strategic loop partitions on *effective* lengths (KV plane):
-        # queue boundaries should separate requests by the work they cost,
-        # not the tokens they carry.  Equal to prompt_len when cached_len=0.
-        self.history.append(req.effective_len)
+        # The strategic loop partitions on *work* lengths (KV + prediction
+        # planes): queue boundaries should separate requests by the work
+        # they cost — uncached prefill plus predicted decode — not the
+        # tokens they carry.  Equal to prompt_len when neither plane has
+        # stamped the request.
+        self.history.append(req.work_len)
         self.total_arrivals += 1
 
     def observe_finish(self, req: Request) -> None:
@@ -75,7 +77,7 @@ class Monitor:
 
     def recent_lengths(self, n: int = 1024) -> np.ndarray:
         reqs = list(self.window)[-n:]
-        return np.asarray([r.effective_len for r in reqs], dtype=np.float64)
+        return np.asarray([r.work_len for r in reqs], dtype=np.float64)
 
     def window_stats(self, wall_elapsed: float) -> WindowStats:
         reqs = list(self.window)

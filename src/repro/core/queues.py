@@ -49,9 +49,11 @@ class SchedulerQueue:
         return self.requests[0] if self.requests else None
 
     def push(self, req: Request) -> None:
-        # All queue statistics run on the *effective* length (uncached
-        # suffix, KV plane) — identical to prompt_len when cached_len is 0.
-        L = req.effective_len
+        # All queue statistics run on the *work* length (uncached suffix +
+        # predicted decode work) — identical to prompt_len when cached_len
+        # is 0 and no prediction is stamped.  Stamps are set at ingest and
+        # never mutated while queued, so push/pop stay balanced.
+        L = req.work_len
         self.requests.append(req)
         self.routed_count += 1
         self.routed_len_sum += L
@@ -62,7 +64,7 @@ class SchedulerQueue:
 
     def pop(self) -> Request:
         req = self.requests.popleft()
-        self.tok_sum -= int(req.effective_len)
+        self.tok_sum -= int(req.work_len)
         return req
 
     def clear_requests(self) -> list[Request]:
@@ -137,11 +139,13 @@ class QueueManager:
         3. with no observed data on one side (cold start / new extreme),
            fall back to interval routing — there is no meaningful gap yet.
 
-        Routing runs on the request's *effective* length: a long prompt
-        with a hot cached prefix joins the queue of the short job it
-        actually is (KV plane; identical to prompt_len when cached_len=0).
+        Routing runs on the request's *work* length: a long prompt with a
+        hot cached prefix joins the queue of the short job it actually is
+        (KV plane), and a short prompt predicted to decode long joins the
+        queue of the long job it actually is (prediction plane); identical
+        to prompt_len when neither plane has stamped the request.
         """
-        L = req.effective_len
+        L = req.work_len
         qi = self._find_interval(L)
         q = self.queues[qi]
         c = self.bubble_cfg
@@ -211,9 +215,9 @@ class QueueManager:
         # Move any waiting requests that now belong to the new intervals.
         stay, move_b, move_t = deque(), [], []
         for r in q.requests:
-            if bubble.bounds.contains(r.effective_len):
+            if bubble.bounds.contains(r.work_len):
                 move_b.append(r)
-            elif tail.bounds.contains(r.effective_len):
+            elif tail.bounds.contains(r.work_len):
                 move_t.append(r)
             else:
                 stay.append(r)
@@ -222,7 +226,7 @@ class QueueManager:
         q.obs_min, q.obs_max = float("inf"), float("-inf")
         q.routed_count, q.routed_len_sum, q.tok_sum = 0, 0.0, 0
         for r in stay:
-            L = r.effective_len
+            L = r.work_len
             q.obs_min = min(q.obs_min, L)
             q.obs_max = max(q.obs_max, L)
             q.routed_count += 1

@@ -41,6 +41,12 @@ class BaseScheduler:
     # (−1 = never; only policies implementing ``adopt_global_policy``
     # participate in fleet-level sync).
     adopted_epoch = -1
+    # Optional output-length predictor (repro.predict.LengthPredictor),
+    # wired by the cluster simulator.  The scheduler itself never calls it
+    # on the hot path — requests arrive already stamped (work_len); the
+    # attribute exists so the fleet policy store can publish/absorb the
+    # predictor's posterior alongside the scheduling policy.
+    predictor = None
 
     def _publish(self) -> None:
         """Delta-publication hook: mark the scheduler state as changed."""
@@ -160,7 +166,7 @@ class SJFScheduler(FCFSScheduler):
     name = "sjf"
 
     def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
-        self.queue.sort(key=lambda r: (r.effective_len, r.arrival_time))
+        self.queue.sort(key=lambda r: (r.work_len, r.arrival_time))
         return super().tick(now, budget)
 
 
@@ -175,7 +181,7 @@ class StaticPriorityScheduler(FCFSScheduler):
         self.short_threshold = short_threshold
 
     def tick(self, now: float, budget: BatchBudget) -> BatchPlan:
-        self.queue.sort(key=lambda r: (r.effective_len > self.short_threshold,
+        self.queue.sort(key=lambda r: (r.work_len > self.short_threshold,
                                        r.arrival_time))
         return super().tick(now, budget)
 
@@ -260,7 +266,7 @@ class EWSJFScheduler(BaseScheduler):
             self.manager.route(req)
         else:
             q = self.manager.queues[
-                self.manager._find_interval(req.effective_len)]
+                self.manager._find_interval(req.work_len)]
             q.push(req)
             req.queue_id = q.queue_id
         self._snapshot_delta([req.queue_id] if req.queue_id is not None
@@ -278,13 +284,13 @@ class EWSJFScheduler(BaseScheduler):
         total_reqs = 0
         total_tokens = 0
         for i, q in enumerate(self.manager.queues):
-            tokens = sum(int(r.effective_len) for r in q.requests)
+            tokens = sum(int(r.work_len) for r in q.requests)
             head = q.peek()
             queues.append(QueueSnapshot(
                 queue_id=q.queue_id, index=i,
                 lo=q.bounds.lo, hi=q.bounds.hi,
                 depth=len(q), tokens=tokens, mean_len=q.mean_len,
-                head_len=head.effective_len if head else None,
+                head_len=head.work_len if head else None,
                 head_wait=head.wait_time(now) if head else 0.0,
                 head_score=(compute_score(head, profiles[q.queue_id], now,
                                           self.c_prefill) if head else 0.0)))
@@ -315,7 +321,7 @@ class EWSJFScheduler(BaseScheduler):
             return None
         p = self._snap_profiles[q.queue_id]
         w = p.weights
-        b = head.effective_len
+        b = head.work_len
         cost = max(self.c_prefill(b), 1e-9)
         qf = (p.index + 1.0) / (p.mean_len + 1.0)
         base = qf * (w.w_base + w.w_fairness * log(b + 1.0))
@@ -505,6 +511,11 @@ class EWSJFScheduler(BaseScheduler):
             "trials": self.meta_opt.export_trials(),
             "edges": [q.bounds.hi for q in self.manager.queues[:-1]],
             "max_queues": self.cfg.max_queues,
+            # Output-length posterior (prediction plane), pooled fleet-wide
+            # by the store; None when no predictor is wired or it has
+            # nothing to share yet.
+            "predictor": (self.predictor.export_state()
+                          if self.predictor is not None else None),
         }
 
     def adopt_global_policy(self, boundaries, meta: MetaParams, trials=(),
@@ -599,7 +610,7 @@ class EWSJFScheduler(BaseScheduler):
         # Close the trial: compute reward over the trial window.
         elapsed = max(now - self._trial_start, 1e-9)
         stats = self.monitor.window_stats(elapsed)
-        qlens = [np.asarray([r.effective_len for r in q.requests],
+        qlens = [np.asarray([r.work_len for r in q.requests],
                             dtype=np.float64)
                  for q in self.manager.queues]
         terms = reward_terms(qlens, stats, len(self.manager.queues))

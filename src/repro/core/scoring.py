@@ -56,11 +56,14 @@ def compute_score(req: Request, profile: QueueProfile, now: float,
                   c_prefill: Callable[[float], float]) -> float:
     """Score the head-of-line request of one queue (Eq. 1 / Eq. 4).
 
-    ``b`` is the request's *effective* length (uncached suffix, KV plane):
-    a long prompt with a hot cached prefix costs what its suffix costs, so
-    it competes — and wins — like the short job it actually is.  Identical
-    to raw ``prompt_len`` whenever ``cached_len`` is 0."""
-    b = req.effective_len
+    ``b`` is the request's *work* length: the effective prompt length
+    (uncached suffix, KV plane) plus the prediction plane's decode-side
+    estimate in prefill-equivalent tokens.  A long prompt with a hot
+    cached prefix competes like the short job it actually is; a short
+    prompt predicted to generate 1k tokens competes like the long job it
+    actually is.  Identical to raw ``prompt_len`` whenever ``cached_len``
+    is 0 and no prediction is stamped."""
+    b = req.work_len
     w = profile.weights
     wait = req.wait_time(now)
     cost = max(c_prefill(b), 1e-9)
@@ -72,7 +75,7 @@ def compute_score(req: Request, profile: QueueProfile, now: float,
 def score_decomposition(req: Request, profile: QueueProfile, now: float,
                         c_prefill: Callable[[float], float]) -> dict:
     """Expose each term for diagnostics / Figure-2-style plots."""
-    b = req.effective_len
+    b = req.work_len
     w = profile.weights
     cost = max(c_prefill(b), 1e-9)
     cs = req.wait_time(now) / cost

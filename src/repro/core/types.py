@@ -63,6 +63,20 @@ class Request:
     cached_len: int = 0
     prefix_fetch: Optional[Any] = None
 
+    # Prediction plane (predicted-length scheduling).  ``predicted_output``
+    # is a predictor's expected output-token count for this request;
+    # ``predicted_extra`` is that estimate converted to *prefill-equivalent*
+    # tokens (batch-amortized decode seconds / per-token prefill seconds),
+    # kept additive so it composes with the KV plane's ``cached_len``
+    # discount, which is stamped later by the router.  Both stay None when
+    # no predictor is wired or the predictor abstains — ``work_len`` then
+    # degrades to ``effective_len`` bit-for-bit.  ``session_id`` groups
+    # requests from one conversation/agent loop (the empirical predictor's
+    # strongest conditioning key); None for sessionless traffic.
+    predicted_output: Optional[float] = None
+    predicted_extra: Optional[float] = None
+    session_id: Optional[int] = None
+
     # Lifecycle bookkeeping (filled in by the engine / simulator).
     state: RequestState = RequestState.WAITING
     terminal: Optional[TerminalState] = None  # stamped once, at exit
@@ -91,6 +105,19 @@ class Request:
         if self.cached_len <= 0:
             return float(self.prompt_len)
         return float(max(self.prompt_len - self.cached_len, 1))
+
+    @property
+    def work_len(self) -> float:
+        """Predicted *total* effective work in prefill-equivalent tokens:
+        the uncached prompt suffix plus the predictor's decode-side
+        estimate (``predicted_extra``).  This is what EWSJF scores and
+        queues on when a prediction plane is wired; with no prediction
+        stamp it is exactly ``effective_len``, so every consumer degrades
+        to the length-blind arithmetic bit-for-bit."""
+        e = self.effective_len
+        if self.predicted_extra is None:
+            return e
+        return e + self.predicted_extra
 
     @property
     def ttft(self) -> Optional[float]:

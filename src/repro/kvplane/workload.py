@@ -83,7 +83,7 @@ class SharedPrefixWorkloadSpec:
                     1.0 / self.mean_output_tokens), 1, self.max_new_tokens))
                 reqs.append(Request(
                     prompt_len=len(prompt), arrival_time=clock,
-                    max_new_tokens=out,
+                    max_new_tokens=out, session_id=ns,
                     prompt_hashes=chain_block_hashes(prompt,
                                                      self.block_size)))
                 reply = [ns * _SESSION_NS + base + ulen + j

@@ -1,0 +1,576 @@
+"""Prediction plane: length predictors, work_len threading, and the
+calibration contract.
+
+The three load-bearing guarantees:
+
+* **Predictor-off is bit-identical**: a fleet with no predictor, a fleet
+  with the abstaining base predictor, and a fleet with a cold empirical
+  predictor (below ``min_obs`` everywhere) produce identical dispatch
+  logs and finish times (property-tested over random workloads — the same
+  pattern the obs plane uses).
+* **Empirical posteriors are calibrated**: quantile estimates cover the
+  stationary distribution, and the recency-windowed point estimate flips
+  within ``recent`` observations of a regime change.
+* **Degradation is bounded**: under adversarial calibration drift the
+  predicted-length scheduler never degrades short-request TTFT p95 by
+  more than a bounded factor vs length-blind EWSJF.
+"""
+
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # container lacks hypothesis
+    from _hypothesis_stub import given, settings, st
+
+from repro.cluster import (AdmissionConfig, AdmissionController,
+                           ClusterSimulator, PolicyStore, PolicyStoreConfig,
+                           ReplicaObservation, ReplicaParams, make_fleet,
+                           make_router)
+from repro.cluster.replica import _Running
+from repro.core import (CostModel, EWSJFConfig, EWSJFScheduler, Request,
+                        WorkloadSpec)
+from repro.predict import (EmpiricalLengthPredictor, HeavyTailDecodeSpec,
+                           LengthPredictor, OracleNoisePredictor,
+                           gittins_index, merge_states, work_equivalent_extra)
+
+
+def _cost():
+    return CostModel(mfu=0.15, hbm_eff=0.7)
+
+
+def _ewsjf_factory():
+    return EWSJFScheduler(EWSJFConfig(min_history=64, reopt_interval=5.0,
+                                      trial_interval=10.0))
+
+
+# ---------------------------------------------------------------------------
+# work_len stamps and the additive composition contract
+# ---------------------------------------------------------------------------
+
+class TestWorkLen:
+    def test_defaults_to_effective_len(self):
+        r = Request(prompt_len=100)
+        assert r.work_len == r.effective_len == 100.0
+
+    def test_adds_predicted_extra(self):
+        r = Request(prompt_len=100)
+        r.predicted_extra = 40.0
+        assert r.work_len == 140.0
+
+    def test_composes_with_kv_cached_len(self):
+        # The KV plane stamps cached_len after ingest; the additive
+        # prediction stamp must not go stale.
+        r = Request(prompt_len=100)
+        r.predicted_extra = 40.0
+        r.cached_len = 80
+        assert r.work_len == r.effective_len + 40.0
+
+    def test_base_predictor_abstains(self):
+        r = Request(prompt_len=100, max_new_tokens=50)
+        LengthPredictor().annotate(r, 0.0)
+        assert r.predicted_output is None and r.predicted_extra is None
+        assert r.work_len == 100.0
+
+    def test_oracle_stamps_one_to_one_without_cost(self):
+        r = Request(prompt_len=100, max_new_tokens=50)
+        OracleNoisePredictor().annotate(r, 0.0)
+        assert r.predicted_output == 50.0
+        assert r.predicted_extra == pytest.approx(50.0)
+
+
+class TestWorkEquivalentExtra:
+    def test_nonpositive_is_zero(self):
+        assert work_equivalent_extra(0.0, 100) == 0.0
+        assert work_equivalent_extra(-5.0, 100) == 0.0
+
+    def test_identity_without_cost_model(self):
+        assert work_equivalent_extra(37.0, 100) == 37.0
+
+    def test_batch_amortized_with_cost_model(self):
+        cost = _cost()
+        x = work_equivalent_extra(100.0, 128, cost=cost)
+        assert 0.0 < x < np.inf
+        # Amortized over a 64-batch, a decode token costs the same order
+        # as a prefill token — not the ~50x of a solo decode step.
+        assert x < 100.0 * 20
+        # Monotone in predicted output.
+        assert work_equivalent_extra(200.0, 128, cost=cost) > x
+
+
+class TestGittins:
+    def test_monotone_in_eos_prob(self):
+        idx = [gittins_index(p) for p in (0.01, 0.05, 0.2, 0.8)]
+        assert idx == sorted(idx)
+
+    def test_clamps(self):
+        assert gittins_index(0.0) > 0.0
+        assert np.isfinite(gittins_index(1.0))
+
+
+# ---------------------------------------------------------------------------
+# Oracle-with-noise: the calibration-error axis
+# ---------------------------------------------------------------------------
+
+class TestOracleNoise:
+    def test_sigma_zero_is_exact(self):
+        r = Request(prompt_len=10, max_new_tokens=77)
+        p = OracleNoisePredictor().predict(r, 0.0)
+        assert p.expected == p.p50 == p.p90 == 77.0
+
+    def test_deterministic_per_request(self):
+        r = Request(prompt_len=10, max_new_tokens=100)
+        pred = OracleNoisePredictor(sigma=0.7, seed=3)
+        a = pred.predict(r, 0.0)
+        b = pred.predict(r, 5.0)
+        c = OracleNoisePredictor(sigma=0.7, seed=3).predict(r, 0.0)
+        assert a.expected == b.expected == c.expected
+
+    def test_noise_decorrelated_across_requests(self):
+        pred = OracleNoisePredictor(sigma=0.7, seed=3)
+        ests = {pred.predict(Request(prompt_len=10, max_new_tokens=100),
+                             0.0).expected for _ in range(8)}
+        assert len(ests) > 1          # distinct request_ids, distinct noise
+
+    def test_bias_shifts_estimate(self):
+        r = Request(prompt_len=10, max_new_tokens=100)
+        low = OracleNoisePredictor(bias=-1.0).predict(r, 0.0)
+        assert low.expected == pytest.approx(100.0 * np.exp(-1.0))
+
+    def test_sigma_widens_p90(self):
+        r = Request(prompt_len=10, max_new_tokens=100)
+        p = OracleNoisePredictor(sigma=0.5, seed=1).predict(r, 0.0)
+        assert p.p90 > p.p50
+
+
+# ---------------------------------------------------------------------------
+# Empirical posteriors: learning, keys, quantile coverage, drift
+# ---------------------------------------------------------------------------
+
+def _finished(prompt_len, out, session_id=None):
+    r = Request(prompt_len=prompt_len, max_new_tokens=out,
+                session_id=session_id)
+    r.generated = out
+    return r
+
+
+class TestEmpirical:
+    def test_cold_predictor_abstains(self):
+        pred = EmpiricalLengthPredictor(min_obs=8)
+        r = Request(prompt_len=100, max_new_tokens=50)
+        assert pred.predict(r, 0.0) is None
+        pred.annotate(r, 0.0)
+        assert r.predicted_extra is None
+
+    def test_warms_after_min_obs(self):
+        pred = EmpiricalLengthPredictor(min_obs=4)
+        for _ in range(4):
+            pred.observe(_finished(100, 30), 0.0)
+        p = pred.predict(Request(prompt_len=100), 0.0)
+        assert p is not None and p.expected == pytest.approx(30.0)
+
+    def test_session_key_preferred_over_global(self):
+        pred = EmpiricalLengthPredictor(min_obs=4)
+        for _ in range(8):
+            pred.observe(_finished(100, 20, session_id=1), 0.0)
+        for _ in range(8):
+            pred.observe(_finished(100, 700, session_id=2), 0.0)
+        p1 = pred.predict(Request(prompt_len=100, session_id=1), 0.0)
+        p2 = pred.predict(Request(prompt_len=100, session_id=2), 0.0)
+        assert p1.expected < 100 < p2.expected
+
+    def test_recent_median_flips_after_regime_change(self):
+        pred = EmpiricalLengthPredictor(min_obs=4, recent=16)
+        for _ in range(20):
+            pred.observe(_finished(100, 768, session_id=5), 0.0)
+        for _ in range(9):
+            pred.observe(_finished(100, 24, session_id=5), 0.0)
+        p = pred.predict(Request(prompt_len=100, session_id=5), 0.0)
+        assert p.expected == pytest.approx(24.0)
+
+    def test_remaining_work_is_conditional(self):
+        pred = EmpiricalLengthPredictor(min_obs=4, recent=16)
+        for out in [10] * 5 + [100] * 5:
+            pred.observe(_finished(100, out, session_id=1), 0.0)
+        req = Request(prompt_len=100, session_id=1)
+        # At g=50 only the 100-token samples remain: E[L - g | L > g] = 50.
+        assert pred.remaining_work(req, 50) == pytest.approx(50.0)
+        # Outlived every sample: still positive (never "basically done").
+        assert pred.remaining_work(req, 200) >= 1.0
+
+    def test_remaining_work_cold_falls_back_to_stamp(self):
+        pred = EmpiricalLengthPredictor(min_obs=4)
+        req = Request(prompt_len=100, max_new_tokens=64)
+        assert pred.remaining_work(req, 10) == pytest.approx(54.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_quantile_coverage_on_random_workloads(self, seed):
+        """The p90 estimate covers ~90% of future draws from the same
+        stationary distribution (generous tolerance: bounded windows)."""
+        rng = np.random.default_rng(seed)
+        mean = float(rng.uniform(8, 120))
+        pred = EmpiricalLengthPredictor(min_obs=8, recent=64, cap=256)
+        train = rng.geometric(1.0 / mean, size=128)
+        for out in train:
+            pred.observe(_finished(100, int(out)), 0.0)
+        p = pred.predict(Request(prompt_len=100), 0.0)
+        test = rng.geometric(1.0 / mean, size=256)
+        coverage = float(np.mean(test <= p.p90))
+        assert 0.75 <= coverage <= 1.0
+        assert p.p50 <= p.p90
+
+    def test_export_merge_roundtrip(self):
+        a = EmpiricalLengthPredictor(min_obs=2)
+        b = EmpiricalLengthPredictor(min_obs=2)
+        for _ in range(4):
+            a.observe(_finished(100, 30, session_id=1), 0.0)
+            b.observe(_finished(100, 500, session_id=2), 0.0)
+        pooled = merge_states([a.export_state(), b.export_state()])
+        fresh = EmpiricalLengthPredictor(min_obs=2)
+        fresh.merge_state(pooled)
+        p1 = fresh.predict(Request(prompt_len=100, session_id=1), 0.0)
+        p2 = fresh.predict(Request(prompt_len=100, session_id=2), 0.0)
+        assert p1.expected == pytest.approx(30.0)
+        assert p2.expected == pytest.approx(500.0)
+
+    def test_merge_states_caps_windows(self):
+        big = {"keys": {"g": list(range(1000))}}
+        pooled = merge_states([big], per_key_cap=64)
+        assert len(pooled["keys"]["g"]) == 64
+        assert pooled["keys"]["g"][-1] == 999.0
+
+    def test_merge_state_blends_local_evidence(self):
+        pred = EmpiricalLengthPredictor(min_obs=2, cap=8)
+        for _ in range(4):
+            pred.observe(_finished(100, 10, session_id=1), 0.0)
+        pred.merge_state({"keys": {"s1": [500.0] * 8}})
+        w = pred._windows["s1"]
+        assert len(w) == 8
+        assert 10.0 in w            # local samples survive the blend
+
+    def test_export_empty_is_none(self):
+        assert EmpiricalLengthPredictor().export_state() is None
+
+
+# ---------------------------------------------------------------------------
+# Heavy-tail workload generator
+# ---------------------------------------------------------------------------
+
+class TestHeavyTailSpec:
+    def test_deterministic_in_seed(self):
+        a = HeavyTailDecodeSpec(n_requests=50, seed=3).generate()
+        b = HeavyTailDecodeSpec(n_requests=50, seed=3).generate()
+        assert [(r.prompt_len, r.max_new_tokens, r.session_id,
+                 r.arrival_time) for r in a] == \
+               [(r.prompt_len, r.max_new_tokens, r.session_id,
+                 r.arrival_time) for r in b]
+
+    def test_sessions_stamped_and_tail_sticky(self):
+        spec = HeavyTailDecodeSpec(n_requests=400, seed=1)
+        reqs = spec.generate()
+        assert all(r.session_id is not None for r in reqs)
+        n_tail = max(int(round(spec.n_sessions * spec.tail_session_frac)), 1)
+        for r in reqs:
+            if r.session_id < n_tail:
+                assert r.max_new_tokens >= spec.tail_output_range[0]
+            else:
+                assert r.max_new_tokens <= spec.body_output_cap
+
+    def test_drift_is_stationary_remap(self):
+        spec = HeavyTailDecodeSpec(n_requests=2000, arrival_rate=20.0,
+                                   drift_time=50.0, seed=2)
+        reqs = spec.generate()
+        pre = [r for r in reqs if r.arrival_time < spec.drift_time]
+        post = [r for r in reqs if r.arrival_time >= spec.drift_time]
+        def tail_frac(rs):
+            return np.mean([r.max_new_tokens > spec.body_output_cap
+                            for r in rs])
+        assert abs(tail_frac(pre) - tail_frac(post)) < 0.1
+        # The tail *sessions* changed across the boundary.
+        pre_tails = {r.session_id for r in pre
+                     if r.max_new_tokens > spec.body_output_cap}
+        post_tails = {r.session_id for r in post
+                      if r.max_new_tokens > spec.body_output_cap}
+        assert pre_tails.isdisjoint(post_tails)
+
+    def test_tail_fraction_matches_session_split(self):
+        spec = HeavyTailDecodeSpec(n_sessions=64, tail_session_frac=0.12)
+        assert spec.tail_fraction() == pytest.approx(8 / 64)
+
+    def test_adversarial_hides_tails_behind_short_prompts(self):
+        spec = HeavyTailDecodeSpec(n_requests=300, adversarial=True, seed=0)
+        for r in spec.generate():
+            if r.max_new_tokens > spec.body_output_cap:
+                assert r.prompt_len == spec.prompt_range[0]
+
+
+# ---------------------------------------------------------------------------
+# Predictor-off bit-identity (the PR's hard contract)
+# ---------------------------------------------------------------------------
+
+def _run_cluster(workload, predictor, with_admission=False, pool=131072):
+    cost = _cost()
+    fleet = make_fleet(3, cost, scheduler_factory=_ewsjf_factory,
+                       params=ReplicaParams(kv_pool_tokens=pool))
+    admission = None
+    if with_admission:
+        admission = AdmissionController(config=AdmissionConfig(
+            tbt_budget=0.25, retry_capacity=0))
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           admission=admission, predictor=predictor)
+    res = sim.run(copy.deepcopy(workload))
+    logs = tuple(tuple((r.request_id, round(w, 12))
+                       for r, w in rep.dispatch_log)
+                 for rep in sim.replicas)
+    fins = tuple(sorted((r.request_id, r.finish_time, r.first_token_time)
+                        for r in res.finished))
+    return logs, fins
+
+
+class TestPredictorOffBitIdentity:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_abstaining_base_predictor_identical(self, seed):
+        workload = WorkloadSpec(n_requests=60, arrival_rate=25.0,
+                                seed=seed).generate()
+        off = _run_cluster(workload, None)
+        on = _run_cluster(workload, LengthPredictor(cost=_cost()))
+        assert off == on
+
+    def test_cold_empirical_predictor_identical(self):
+        # An empirical predictor that never reaches min_obs abstains
+        # everywhere — indistinguishable from no predictor.
+        workload = WorkloadSpec(n_requests=80, arrival_rate=30.0,
+                                seed=3).generate()
+        off = _run_cluster(workload, None)
+        cold = _run_cluster(
+            workload, EmpiricalLengthPredictor(min_obs=10_000, cost=_cost()))
+        assert off == cold
+
+    def test_identical_under_admission_and_kv_pressure(self):
+        workload = HeavyTailDecodeSpec(n_requests=120, arrival_rate=30.0,
+                                       seed=5).generate()
+        off = _run_cluster(workload, None, with_admission=True, pool=8192)
+        on = _run_cluster(workload, LengthPredictor(cost=_cost()),
+                          with_admission=True, pool=8192)
+        assert off == on
+
+    def test_oracle_predictor_changes_schedule(self):
+        # Sanity: the plane is actually live — a non-abstaining predictor
+        # must be able to move decisions on a tail-heavy workload.
+        workload = HeavyTailDecodeSpec(n_requests=150, arrival_rate=30.0,
+                                       seed=5).generate()
+        off = _run_cluster(workload, None, pool=8192)
+        on = _run_cluster(workload, OracleNoisePredictor(cost=_cost()),
+                          pool=8192)
+        assert off != on
+
+
+# ---------------------------------------------------------------------------
+# Replica plumbing: victim selection + predicted decode costing
+# ---------------------------------------------------------------------------
+
+def _one_replica(predictor=None):
+    cost = _cost()
+    rep = make_fleet(1, cost, scheduler_factory=_ewsjf_factory)[0]
+    rep.predictor = predictor
+    return rep
+
+
+def _running(prompt, out, predicted=None, generated=0):
+    r = Request(prompt_len=prompt, max_new_tokens=out)
+    r.generated = generated
+    if predicted is not None:
+        r.predicted_output = float(predicted)
+        r.predicted_extra = float(predicted)
+    return _Running(r, kv_tokens=prompt + generated, remaining=out - generated)
+
+
+class TestReplicaPredictionPlumbing:
+    def test_victim_index_without_predictor_is_newest(self):
+        rep = _one_replica(None)
+        rep.running = [_running(100, 20), _running(100, 900)]
+        assert rep._victim_index() == -1
+
+    def test_victim_index_demotes_longest_predicted(self):
+        rep = _one_replica(OracleNoisePredictor())
+        rep.running = [_running(100, 20, predicted=20),
+                       _running(100, 900, predicted=900),
+                       _running(100, 50, predicted=50)]
+        assert rep._victim_index() == 1
+
+    def test_victim_index_unstamped_batch_is_newest(self):
+        rep = _one_replica(OracleNoisePredictor())
+        rep.running = [_running(100, 20), _running(100, 900)]
+        assert rep._victim_index() == -1
+
+    def test_predicted_decode_seconds_abstains(self):
+        rep = _one_replica(None)
+        rep.running = [_running(100, 900, predicted=900)]
+        assert rep.predicted_decode_seconds() is None
+        rep2 = _one_replica(OracleNoisePredictor())
+        assert rep2.predicted_decode_seconds() is None       # empty batch
+
+    def test_predicted_decode_seconds_scales_with_remaining(self):
+        rep = _one_replica(OracleNoisePredictor())
+        rep.running = [_running(100, 50, predicted=50)]
+        short = rep.predicted_decode_seconds()
+        rep.running = [_running(100, 900, predicted=900)]
+        long = rep.predicted_decode_seconds()
+        assert short is not None and long is not None and long > short
+        # Per-step signal does not scale with remaining tokens.
+        assert rep.predicted_step_seconds() < long
+
+
+# ---------------------------------------------------------------------------
+# Admission: decode-burn shed + predicted token charging
+# ---------------------------------------------------------------------------
+
+class TestAdmissionDecodeBurn:
+    def _ctrl(self, tbt_budget):
+        return AdmissionController(config=AdmissionConfig(
+            tbt_budget=tbt_budget, retry_capacity=0))
+
+    def test_sheds_sheddable_on_predicted_burn(self):
+        ctrl = self._ctrl(0.1)
+        ctrl.decode_pressure_fn = lambda: 0.5
+        req = Request(prompt_len=1000)          # classified "batch"
+        d = ctrl.admit(req, now=0.0, est_delay=0.0)
+        assert not d.admitted and d.reason == "decode_burn"
+        assert ctrl.tbt_denied["batch"] == 1
+
+    def test_non_sheddable_rides_through_burn(self):
+        ctrl = self._ctrl(0.1)
+        ctrl.decode_pressure_fn = lambda: 0.5
+        d = ctrl.admit(Request(prompt_len=64), now=0.0, est_delay=0.0)
+        assert d.admitted                       # interactive: not sheddable
+
+    def test_budget_zero_disables_check(self):
+        ctrl = self._ctrl(0.0)
+        ctrl.decode_pressure_fn = lambda: 99.0
+        d = ctrl.admit(Request(prompt_len=1000), now=0.0, est_delay=0.0)
+        assert d.admitted
+
+    def test_abstaining_pressure_admits(self):
+        ctrl = self._ctrl(0.1)
+        ctrl.decode_pressure_fn = lambda: None
+        d = ctrl.admit(Request(prompt_len=1000), now=0.0, est_delay=0.0)
+        assert d.admitted
+
+    def test_token_cost_uses_predicted_output(self):
+        r = Request(prompt_len=100, max_new_tokens=512)
+        assert AdmissionController._token_cost(r) == pytest.approx(612.0)
+        r.predicted_output = 30.0
+        assert AdmissionController._token_cost(r) == pytest.approx(130.0)
+
+
+# ---------------------------------------------------------------------------
+# PolicyStore: posterior rides the epoch protocol
+# ---------------------------------------------------------------------------
+
+def _store_obs(rid, predictor_state, epoch_seen=0):
+    rng = np.random.default_rng(rid)
+    return ReplicaObservation(
+        replica_id=rid, time=0.0, epoch_seen=epoch_seen,
+        lengths=rng.uniform(10, 500, size=64), n_arrivals=64,
+        predictor=predictor_state)
+
+
+class TestPolicyStorePredictor:
+    def test_merge_pools_predictor_states(self):
+        store = PolicyStore(PolicyStoreConfig(min_fleet_samples=32))
+        store.publish(_store_obs(0, {"keys": {"s1": [30.0] * 8}}))
+        store.publish(_store_obs(1, {"keys": {"s2": [700.0] * 8}}))
+        pol = store.merge(now=0.0)
+        assert pol is not None
+        assert set(pol.predictor_state["keys"]) == {"s1", "s2"}
+        assert store.predictor_rev == 1
+
+    def test_absorb_is_rev_guarded_on_shared_predictor(self):
+        store = PolicyStore(PolicyStoreConfig(min_fleet_samples=32))
+        store.publish(_store_obs(0, {"keys": {"s1": [30.0] * 8}}))
+        store.merge(now=0.0)
+        shared = EmpiricalLengthPredictor(min_obs=2, cap=16)
+
+        class _Sched:
+            predictor = shared
+        store._absorb_predictor(_Sched())
+        n_after_first = len(shared._windows["s1"])
+        store._absorb_predictor(_Sched())       # second replica, same object
+        assert len(shared._windows["s1"]) == n_after_first
+
+    def test_stable_merge_refreshes_state_without_epoch_bump(self):
+        store = PolicyStore(PolicyStoreConfig(min_fleet_samples=32))
+        store.publish(_store_obs(0, {"keys": {"s1": [30.0] * 8}}))
+        pol1 = store.merge(now=0.0)
+        store.publish(_store_obs(0, {"keys": {"s1": [30.0] * 8,
+                                              "s9": [60.0] * 8}},
+                                 epoch_seen=pol1.epoch))
+        pol2 = store.merge(now=10.0)
+        assert pol2.epoch == pol1.epoch
+        assert "s9" in pol2.predictor_state["keys"]
+        assert store.predictor_rev == 2
+
+    def test_cluster_sync_propagates_posterior(self):
+        cost = _cost()
+        store = PolicyStore(PolicyStoreConfig(sync_interval=1.0,
+                                              min_fleet_samples=32))
+        fleet = make_fleet(2, cost, scheduler_factory=_ewsjf_factory)
+        pred = EmpiricalLengthPredictor(min_obs=4, cost=cost)
+        sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                               policy_store=store, predictor=pred)
+        wl = HeavyTailDecodeSpec(n_requests=200, arrival_rate=20.0,
+                                 seed=1).generate()
+        sim.run(wl)
+        pol = store.current()
+        assert pol is not None and pol.predictor_state
+        assert store.predictor_rev >= 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end DES properties: drift degradation is bounded
+# ---------------------------------------------------------------------------
+
+def _short_p95(res, spec):
+    st_ = np.array([r.ttft for r in res.finished
+                    if r.ttft is not None and r.prompt_len <= 256
+                    and r.max_new_tokens <= spec.body_output_cap])
+    return float(np.percentile(st_, 95)) if len(st_) else 0.0
+
+
+def _run_pressure(workload, predictor):
+    cost = _cost()
+    fleet = make_fleet(4, cost, scheduler_factory=_ewsjf_factory,
+                       params=ReplicaParams(kv_pool_tokens=8192))
+    sim = ClusterSimulator(fleet, make_router("ewsjf", cost), cost,
+                           predictor=predictor)
+    return sim.run(copy.deepcopy(workload))
+
+
+class TestDriftBoundedDegradation:
+    def test_adversarial_drift_never_much_worse_than_blind(self):
+        spec = HeavyTailDecodeSpec(
+            n_requests=400, arrival_rate=24.0, n_sessions=24,
+            tail_session_frac=0.15, drift_time=400 / (2 * 24.0),
+            adversarial=True, seed=3)
+        wl = spec.generate()
+        blind = _short_p95(_run_pressure(wl, None), spec)
+        emp = _short_p95(_run_pressure(
+            wl, EmpiricalLengthPredictor(cost=_cost())), spec)
+        assert emp <= 2.0 * max(blind, 1e-9)
+
+    def test_oracle_beats_blind_under_kv_pressure(self):
+        spec = HeavyTailDecodeSpec(n_requests=400, arrival_rate=24.0,
+                                   n_sessions=24, tail_session_frac=0.15,
+                                   seed=0)
+        wl = spec.generate()
+        blind = _short_p95(_run_pressure(wl, None), spec)
+        oracle = _short_p95(_run_pressure(
+            wl, OracleNoisePredictor(cost=_cost())), spec)
+        assert oracle < blind
