@@ -155,10 +155,16 @@ class ServingSimulator:
     multi-step decode charge → completions/preemptions → repeat."""
 
     def __init__(self, scheduler: BaseScheduler, cost: CostModel,
-                 params: EngineParams | None = None):
+                 params: EngineParams | None = None,
+                 on_dispatch=None):
         self.sched = scheduler
         self.cost = cost
         self.p = params or EngineParams()
+        # Replay-harness hook: ``on_dispatch(requests, t)`` fires once per
+        # tick whose admission plan survived abort filtering, before the
+        # prefill charge — the DES side of the DES↔engine dispatch-order
+        # equivalence check (serving/replay.py).  Pure observation.
+        self.on_dispatch = on_dispatch
 
     def run(self, requests: list[Request], max_sim_time: float = 1e7) -> SimResult:
         p = self.p
@@ -219,6 +225,8 @@ class ServingSimulator:
 
             # 3) prefill charge
             if plan and plan.requests:
+                if self.on_dispatch is not None:
+                    self.on_dispatch(plan.requests, t)
                 batch_tokens = plan.total_tokens
                 padded = plan.padded_tokens if p.bucket_pad else batch_tokens
                 padded = max(padded, batch_tokens)

@@ -24,7 +24,7 @@ router's KV-occupancy signal must see.  Invariants (property-tested):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 from ..serving.kv_cache import BlockPool
 
@@ -98,6 +98,11 @@ class RadixPrefixIndex:
         self.pool = pool
         self.block_size = block_size
         self.capacity_blocks = capacity_blocks
+        # Eviction callback: ``on_evict(node_id)`` fires whenever a node
+        # leaves the tree (LRU eviction or clear()).  The real engine hangs
+        # its host-side KV block store off this so evicted prefixes drop
+        # their tensors in the same breath as their pool blocks.
+        self.on_evict: Optional[Callable[[int], None]] = None
         self._root = _Node(hash=0, parent=None, node_id=0, depth=0)
         self._next_id = 1
         self._nodes: dict[int, _Node] = {}       # node_id -> node (non-root)
@@ -229,6 +234,8 @@ class RadixPrefixIndex:
     def _remove(self, node: _Node) -> None:
         assert not node.children and node.pins == 0
         self.pool.free(self._alloc_key(node.node_id))
+        if self.on_evict is not None:
+            self.on_evict(node.node_id)
         node.parent.children.pop(node.hash, None)
         self._nodes.pop(node.node_id, None)
         self._leaves.pop(node.node_id, None)
@@ -245,6 +252,8 @@ class RadixPrefixIndex:
             node.children = {}
         for node in list(self._nodes.values()):
             self.pool.free(self._alloc_key(node.node_id))
+            if self.on_evict is not None:
+                self.on_evict(node.node_id)
         self._root = _Node(hash=0, parent=None, node_id=0, depth=0)
         self._nodes.clear()
         self._leaves.clear()

@@ -2,13 +2,15 @@
 architectures (DESIGN.md §2)."""
 
 from .common import DtypePolicy
-from .model import (chunked_cross_entropy, decode_step, init_decode_caches,
-                    init_params, pad_prefill_caches, prefill, train_loss)
-from .transformer import MoECtx, layer_kinds, stack_layout
+from .model import (chunk_step, chunked_cross_entropy, decode_step,
+                    init_decode_caches, init_params, pad_prefill_caches,
+                    prefill, train_loss)
+from .transformer import (MoECtx, layer_kinds, stack_layout,
+                          supports_chunked_decode)
 
 __all__ = [
     "DtypePolicy", "MoECtx",
-    "init_params", "train_loss", "prefill", "decode_step",
+    "init_params", "train_loss", "prefill", "decode_step", "chunk_step",
     "init_decode_caches", "chunked_cross_entropy", "pad_prefill_caches",
-    "layer_kinds", "stack_layout",
+    "layer_kinds", "stack_layout", "supports_chunked_decode",
 ]

@@ -318,6 +318,90 @@ def mla_decode(params, x, cache: dict, cache_pos, cfg: ModelConfig,
 
 
 # --------------------------------------------------------------------------
+# chunked decode (multi-token prefill against an existing cache)
+# --------------------------------------------------------------------------
+
+def gqa_chunk_decode(params, x, cache: dict, pos0, cfg: ModelConfig,
+                     *, window: int = 0):
+    """Process one contiguous C-token span against an existing full-layout
+    cache: write K/V at absolute positions ``pos0 .. pos0+C-1``, attend
+    causally over everything resident up to each query.  This is the one
+    primitive both chunked prefill and radix prefix reuse need — a prefill
+    that *starts at an offset* (pos0=0 degrades to plain prefill; C=1 to
+    single-token decode).  x (B,C,d); cache k/v (B,S_max,K,hd); pos0 is a
+    scalar shared by every row (the engine runs one slot per chunk call).
+    Ring-buffer (windowed) caches are NOT supported: a later chunk token
+    would overwrite the ring slot an earlier in-chunk query still needs —
+    the engine gates on ``supports_chunked_decode``."""
+    B, C, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p0 = jnp.asarray(pos0, jnp.int32).reshape(())
+    positions = p0 + jnp.arange(C, dtype=jnp.int32)            # (C,)
+    pos_b = jnp.broadcast_to(positions[None], (B, C))
+    q = (x @ params["wq"]).reshape(B, C, H, hd)
+    k_new = (x @ params["wk"]).reshape(B, C, K, hd)
+    v_new = (x @ params["wv"]).reshape(B, C, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), p0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), p0, axis=1)
+    T = k.shape[1]
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (C, T), 1)
+    mask = k_pos <= positions[:, None]                         # (C,T) causal
+    if window and window > 0:
+        mask &= k_pos > (positions[:, None] - window)
+    out = gqa_attend(q, k, v, mask)
+    y = out @ params["wo"]
+    return y, {"k": k, "v": v}
+
+
+def mla_chunk_decode(params, x, cache: dict, pos0, cfg: ModelConfig,
+                     *, window: int = 0):
+    """Chunked absorbed-MLA decode (see :func:`gqa_chunk_decode` for the
+    contract): write C latent rows at ``pos0..pos0+C-1``, score every
+    in-chunk query against the cached latent directly."""
+    B, C, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    r, rd, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim
+    p0 = jnp.asarray(pos0, jnp.int32).reshape(())
+    positions = p0 + jnp.arange(C, dtype=jnp.int32)
+    pos_b = jnp.broadcast_to(positions[None], (B, C))
+    q = (x @ params["wq"]).reshape(B, C, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, pos_b, cfg.rope_theta)         # (B,C,H,rd)
+    c_new = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope((x @ params["w_krope"]).reshape(B, C, 1, rd),
+                            pos_b, cfg.rope_theta)[:, :, 0]    # (B,C,rd)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], c_new.astype(cache["latent"].dtype), p0, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), p0, axis=1)
+    w_uk = params["w_uk"].reshape(r, H, hd)
+    q_eff = jnp.einsum("bchd,rhd->bchr", q_nope, w_uk)
+    scale = (hd + rd) ** -0.5
+    scores = (jnp.einsum("bchr,btr->bhct", q_eff, latent)
+              + jnp.einsum("bchd,btd->bhct", q_rope, k_rope)) * scale
+    T = latent.shape[1]
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (C, T), 1)
+    mask = k_pos <= positions[:, None]
+    if window and window > 0:
+        mask &= k_pos > (positions[:, None] - window)
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32),
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(latent.dtype)
+    ctx = jnp.einsum("bhct,btr->bchr", probs, latent)
+    w_uv = params["w_uv"].reshape(r, H, vd)
+    out = jnp.einsum("bchr,rhd->bchd", ctx, w_uv).reshape(B, C, H * vd)
+    y = out @ params["wo"]
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+# --------------------------------------------------------------------------
 # dispatch by config
 # --------------------------------------------------------------------------
 
@@ -346,3 +430,10 @@ def attn_decode(params, x, cache, cache_pos, cfg: ModelConfig, kind: str):
     if cfg.use_mla:
         return mla_decode(params, x, cache, cache_pos, cfg, window=w)
     return gqa_decode(params, x, cache, cache_pos, cfg, window=w)
+
+
+def attn_chunk_decode(params, x, cache, pos0, cfg: ModelConfig, kind: str):
+    w = window_for(cfg, kind)
+    if cfg.use_mla:
+        return mla_chunk_decode(params, x, cache, pos0, cfg, window=w)
+    return gqa_chunk_decode(params, x, cache, pos0, cfg, window=w)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .common import DtypePolicy, embed_init, dense_init, rms_norm
 from .transformer import (MoECtx, constrain_x, init_stack, init_stack_cache,
-                          stack_decode, stack_forward)
+                          stack_chunk, stack_decode, stack_forward)
 
 AUX_LOSS_WEIGHT = 0.01
 
@@ -144,6 +144,31 @@ def decode_step(params, tokens, caches, cache_pos, cfg: ModelConfig,
     h, new_caches = stack_decode(params["blocks"], x, caches, cache_pos,
                                  cfg, moe_ctx)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w_head = _unembed(params, cfg)
+    logits = (h.astype(w_head.dtype) @ w_head).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_caches
+
+
+def chunk_step(params, tokens, caches, pos0, cfg: ModelConfig,
+               moe_ctx: MoECtx = MoECtx(), *,
+               policy: DtypePolicy = DtypePolicy.serve()):
+    """Prefill one C-token chunk against existing decode caches.
+
+    tokens (B,C) i32; ``pos0`` scalar i32 — tokens already resident in every
+    row's cache (the chunk occupies absolute positions pos0..pos0+C-1).
+    Returns (logits at the chunk's last position, (B,1,V) f32, new caches).
+    With pos0=0 and C=prompt_len this is a whole prefill; with C=1 it is
+    decode_step — the engine uses it for both chunked prefill and
+    prefix-offset (radix-reuse) prefill.  Requires
+    ``transformer.supports_chunked_decode(cfg)``."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(policy.compute)
+    if cfg.tie_embeddings:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(policy.compute)
+    h, new_caches = stack_chunk(params["blocks"], x, caches, pos0,
+                                cfg, moe_ctx)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
     w_head = _unembed(params, cfg)
     logits = (h.astype(w_head.dtype) @ w_head).astype(jnp.float32)
     if cfg.logit_softcap:

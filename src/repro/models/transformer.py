@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import (attn_decode, attn_forward, gqa_decode_ring,
-                        init_attention, ring_cache_from_prefill, window_for)
+from .attention import (attn_chunk_decode, attn_decode, attn_forward,
+                        gqa_decode_ring, init_attention,
+                        ring_cache_from_prefill, window_for)
 from .common import rms_norm
 from .mlp import init_mlp, mlp_forward
 from .moe import aux_load_balance_loss, init_moe, moe_forward
@@ -164,6 +165,42 @@ def block_decode(bp: dict, x, cache, cache_pos, cfg: ModelConfig, kind: str,
         mix, new_cache = ssm_decode(bp["mixer"], h, cache, cfg)
     else:
         mix, new_cache = rglru_decode(bp["mixer"], h, cache, cfg)
+    x = x + mix.astype(x.dtype)
+    if "mlp" in bp:
+        h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if use_moe:
+            y, _ = moe_forward(
+                bp["mlp"], h2, cfg, impl=moe_ctx.impl, mesh=moe_ctx.mesh,
+                batch_axes=moe_ctx.batch_axes, expert_axis=moe_ctx.expert_axis)
+        else:
+            y = mlp_forward(bp["mlp"], h2)
+        x = x + y.astype(x.dtype)
+    return x, new_cache
+
+
+def supports_chunked_decode(cfg: ModelConfig) -> bool:
+    """True when every layer of the stack can run :func:`block_chunk` —
+    chunked prefill / prefix-offset prefill against a full-layout cache.
+    Excludes ring-buffer (SWA/local) attention (a later chunk token
+    overwrites the ring slot an earlier in-chunk query still needs),
+    recurrent state (ssm/rglru need strictly sequential scans), encoder-only
+    stacks (no decode cache), and non-token frontends."""
+    if cfg.is_encoder_only or cfg.input_mode != "tokens":
+        return False
+    kinds = set(layer_kinds(cfg))
+    if not all(k in ATTN_KINDS for k in kinds):
+        return False
+    return not any(_uses_ring(cfg, k) for k in kinds)
+
+
+def block_chunk(bp: dict, x, cache, pos0, cfg: ModelConfig, kind: str,
+                use_moe: bool, moe_ctx: MoECtx):
+    """C-token chunk decode through a block (x: (B,C,d)).  Returns
+    (x, new_cache).  Only attention kinds — see supports_chunked_decode."""
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if kind not in ATTN_KINDS or (not cfg.use_mla and _uses_ring(cfg, kind)):
+        raise ValueError(f"chunked decode unsupported for layer kind {kind}")
+    mix, new_cache = attn_chunk_decode(bp["mixer"], h, cache, pos0, cfg, kind)
     x = x + mix.astype(x.dtype)
     if "mlp" in bp:
         h2 = rms_norm(x, bp["ln2"], cfg.norm_eps)
@@ -346,6 +383,44 @@ def stack_decode(params: dict, x, caches: dict, cache_pos, cfg: ModelConfig,
         kind = cfg.pattern[i % len(cfg.pattern)]
         x, c = block_decode(params["tail"][i], x, caches["tail"][i], cache_pos,
                             cfg, kind, use_moe, moe_ctx)
+        new_caches["tail"].append(c)
+
+    return x, new_caches
+
+
+def stack_chunk(params: dict, x, caches: dict, pos0, cfg: ModelConfig,
+                moe_ctx: MoECtx):
+    """Chunked decode through the whole stack (same {head, scan, tail}
+    traversal as stack_decode; x (B,C,d)).  Returns (x, new_caches)."""
+    head, n_periods, tail = stack_layout(cfg)
+    kinds = layer_kinds(cfg)
+    use_moe = cfg.n_experts > 0
+    new_caches: dict = {"head": [], "tail": []}
+
+    for i in range(head):
+        x, c = block_chunk(params["head"][i], x, caches["head"][i], pos0,
+                           cfg, kinds[i], False, moe_ctx)
+        new_caches["head"].append(c)
+
+    if n_periods > 0:
+        def scan_body(x, inp):
+            x = constrain_x(x, moe_ctx)
+            pp, pc = inp
+            ncs = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, nc = block_chunk(pp[f"slot_{i}"], x, pc[f"slot_{i}"],
+                                    pos0, cfg, kind, use_moe, moe_ctx)
+                ncs[f"slot_{i}"] = nc
+            return x, ncs
+
+        x, stack_caches = jax.lax.scan(
+            scan_body, x, (params["stack"], caches["stack"]))
+        new_caches["stack"] = stack_caches
+
+    for i in range(tail):
+        kind = cfg.pattern[i % len(cfg.pattern)]
+        x, c = block_chunk(params["tail"][i], x, caches["tail"][i], pos0,
+                           cfg, kind, use_moe, moe_ctx)
         new_caches["tail"].append(c)
 
     return x, new_caches

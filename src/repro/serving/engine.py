@@ -20,13 +20,31 @@ Right-padded prompts are safe for attention/ring caches (pads are causally
 masked and progressively overwritten); recurrent state (ssm/rglru) would be
 contaminated, so those families run with exact-length prefill
 (``pad_prompts=False``).
+
+Two opt-in execution features converge the engine with the cluster planes
+(docs/ENGINE.md):
+
+* **chunked prefill** (``chunk_prefill_tokens``) — prompts prefill in
+  budgeted chunks through a per-slot ``chunk_step``, interleaved with
+  ``_decode_tick`` so a long prompt no longer stalls every decoding
+  sequence for its whole prefill (decode TBT stays bounded by the chunk
+  budget, the same per-tick token budget the DES ``BatchBuilder`` charges);
+* **engine-side radix prefix reuse** (``enable_prefix_cache``) — a
+  ``kvplane.RadixPrefixIndex`` runs against the engine's own ``BlockPool``;
+  real prefills match their chained block hashes, copy the cached prefix KV
+  into the slot, and prefill only the uncached suffix (at its true offset,
+  via the same chunked path).  Prefix paths are pinned in-flight and
+  unpinned on finish/preempt; evicted nodes drop their host-side KV through
+  the index's ``on_evict`` hook.
+
+Both features off ⇒ the legacy bucketed-batch path runs bit-identically.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,17 +54,25 @@ from ..configs.base import ModelConfig
 from ..core.batch_builder import BatchBudget
 from ..core.scheduler import BaseScheduler
 from ..core.types import Request, RequestState, TerminalState
+
+if TYPE_CHECKING:   # runtime import is deferred: kvplane.radix imports
+    from ..kvplane.radix import RadixPrefixIndex   # serving.kv_cache, and a
+                                                   # module-level import here
+                                                   # would close the cycle
 from ..models.common import DtypePolicy
-from ..models.model import (_embed_inputs, _unembed, decode_step,
+from ..models.model import (_embed_inputs, _unembed, chunk_step, decode_step,
                             init_decode_caches, pad_prefill_caches)
 from ..models.common import rms_norm
-from ..models.transformer import MoECtx, stack_forward
+from ..models.transformer import MoECtx, stack_forward, supports_chunked_decode
 from .kv_cache import BlockPool, SlotAllocator
 from .sampler import sample_tokens
 
 
 @dataclass
 class EngineConfig:
+    """Sizing + feature knobs of one engine (docs/ENGINE.md for the full
+    calibration table and the mapping onto the DES ``EngineParams``)."""
+
     max_slots: int = 8
     s_max: int = 512
     block_size: int = 16
@@ -59,6 +85,11 @@ class EngineConfig:
     pad_prompts: Optional[bool] = None   # None => auto by family
     moe_impl: str = "dropping"
     seed: int = 0
+    # Real-engine convergence features (both default-off: the legacy
+    # bucketed-batch prefill path then runs bit-identically).
+    chunk_prefill_tokens: Optional[int] = None  # per-tick chunk budget; None=off
+    enable_prefix_cache: bool = False           # engine-side radix KV reuse
+    prefix_cache_blocks: Optional[int] = None   # radix pool-share cap (None=all)
 
 
 @dataclass
@@ -66,9 +97,31 @@ class _SlotState:
     req: Request
     seq_id: int
     budget_left: int
+    pin_node: object = None         # pinned radix path (prefix-cache mode)
+    cap_tokens: int = 0             # KV token capacity allocated (chunked mode)
+
+
+@dataclass
+class _PrefillState:
+    """A slot mid-chunked-prefill: admitted, holding pool blocks and its
+    pinned prefix path, cursor at ``pos`` prompt tokens resident."""
+
+    req: Request
+    seq_id: int
+    pos: int                        # prompt tokens already in the slot cache
+    pin_node: object = None
+    cap_tokens: int = 0
+    t_dispatch: float = 0.0
 
 
 class ServingEngine:
+    """Continuous-batching executor over a real JAX model (module docstring
+    for the execution model).  Construct with a model config + params, a
+    ``core.scheduler`` policy, and an ``EngineConfig``; drive with ``run``
+    (batch) or ``add_request`` + the internal ticks (streaming).  Optional
+    collaborators mirror the cluster planes: ``admission`` (SLO ingress),
+    ``policy_store`` (strategic sync), ``obs`` (observability)."""
+
     def __init__(self, cfg: ModelConfig, params, scheduler: BaseScheduler,
                  ecfg: EngineConfig | None = None,
                  policy: DtypePolicy | None = None,
@@ -87,11 +140,42 @@ class ServingEngine:
         self.pool = BlockPool(self.e.kv_pool_tokens // self.e.block_size,
                               self.e.block_size)
         self.slots = SlotAllocator(self.e.max_slots)
+        # Chunked-prefill / prefix-reuse mode: every admission goes through
+        # the per-slot chunk path (suffix prefill at an offset needs it).
+        self._chunked = (bool(self.e.chunk_prefill_tokens)
+                         or self.e.enable_prefix_cache)
+        if self._chunked and not supports_chunked_decode(cfg):
+            raise ValueError(
+                f"chunked prefill / prefix cache unsupported for family "
+                f"{cfg.family!r} (ring/recurrent/encoder-only stacks)")
+        self._chunk_budget = (self.e.chunk_prefill_tokens
+                              or self.e.max_prefill_tokens)
+        self.radix: Optional[RadixPrefixIndex] = None
+        self._node_kv: dict[int, dict] = {}   # radix node_id -> host KV block
+        if self.e.enable_prefix_cache:
+            from ..kvplane.radix import RadixPrefixIndex
+            self.radix = RadixPrefixIndex(
+                self.pool, self.e.block_size,
+                capacity_blocks=self.e.prefix_cache_blocks)
+            self.radix.on_evict = lambda nid: self._node_kv.pop(nid, None)
+        self._prefilling: dict[int, _PrefillState] = {}  # admission order
+        self._chunk_jits: dict = {}
+        self.chunks_run = 0
+        self.chunk_tokens = 0
+        self.prefix_saved_tokens = 0
+        self.interleaved_ticks = 0   # decode ticks run while a prefill was up
         self.caches = init_decode_caches(cfg, self.e.max_slots, self.e.s_max,
                                          dtype=self.policy.compute)
         self.slot_pos = np.zeros(self.e.max_slots, dtype=np.int32)
         self.slot_state: dict[int, _SlotState] = {}
         self.last_tokens = np.zeros((self.e.max_slots, 1), dtype=np.int32)
+        # Replay/telemetry instrumentation (pure recording — never read by
+        # scheduling): dispatch order for the DES-equivalence harness, and
+        # wall-clock inter-token gaps (the chunked-prefill TBT-bound bench).
+        self.dispatch_log: list[tuple] = []          # (now, request_id)
+        self.decode_gaps: list[float] = []
+        self._slot_last_tok = np.full(self.e.max_slots, -1.0)
+        self.output_tokens: dict[int, list[int]] = {}  # rid -> sampled ids
         # Replica-facing admission hook (cluster.AdmissionController or any
         # object with .admit(req, now, est_delay) -> decision.admitted).
         self.admission = admission
@@ -157,9 +241,96 @@ class ServingEngine:
             self._prefill_jits[key] = jax.jit(self._prefill_fn)
         return self._prefill_jits[key]
 
+    def _chunk_fn(self, params, tokens, slot_caches, pos0):
+        """One prefill chunk for a single slot (B=1): C tokens written at
+        absolute positions pos0..pos0+C-1, logits at the chunk's last
+        position.  ``pos0`` is traced, so one compilation per chunk width
+        serves every offset (chunk cursors and radix-prefix offsets)."""
+        return chunk_step(params, tokens, slot_caches, pos0, self.cfg,
+                          self.moe_ctx, policy=self.policy)
+
+    def _get_chunk_jit(self, width: int):
+        if width not in self._chunk_jits:
+            self._chunk_jits[width] = jax.jit(self._chunk_fn)
+        return self._chunk_jits[width]
+
+    # ---- slot-cache plumbing ---------------------------------------------
+
+    def _map_into_caches(self, src, flat, stacked) -> None:
+        """Merge a source cache pytree into the engine caches leafwise:
+        ``flat(dst, src)`` on head/tail entries (batch axis 0), ``stacked``
+        on the scan group (period dim leads, batch axis 1)."""
+        new = dict(self.caches)
+        new["head"] = [jax.tree.map(flat, d, s)
+                       for d, s in zip(self.caches["head"], src["head"])]
+        if "stack" in self.caches:
+            new["stack"] = jax.tree.map(stacked, self.caches["stack"],
+                                        src["stack"])
+        new["tail"] = [jax.tree.map(flat, d, s)
+                       for d, s in zip(self.caches["tail"], src["tail"])]
+        self.caches = new
+
+    def _slice_slot(self, slot: int):
+        """View of one slot's caches as a B=1 pytree (chunk_step input)."""
+        def flat(t):
+            return t[slot:slot + 1]
+
+        def stacked(t):
+            return t[:, slot:slot + 1]
+
+        out = {"head": [jax.tree.map(flat, c) for c in self.caches["head"]],
+               "tail": [jax.tree.map(flat, c) for c in self.caches["tail"]]}
+        if "stack" in self.caches:
+            out["stack"] = jax.tree.map(stacked, self.caches["stack"])
+        return out
+
+    def _extract_block(self, slot: int, block_idx: int) -> dict:
+        """Host-side (numpy) copy of one KV block's rows from a slot —
+        what the radix node stores so later requests can re-attach it."""
+        lo = block_idx * self.e.block_size
+        hi = lo + self.e.block_size
+
+        def flat(t):
+            return np.asarray(t[slot, lo:hi])
+
+        def stacked(t):
+            return np.asarray(t[:, slot, lo:hi])
+
+        out = {"head": [jax.tree.map(flat, c) for c in self.caches["head"]],
+               "tail": [jax.tree.map(flat, c) for c in self.caches["tail"]]}
+        if "stack" in self.caches:
+            out["stack"] = jax.tree.map(stacked, self.caches["stack"])
+        return out
+
+    def _write_block(self, slot: int, block_idx: int, block_kv: dict) -> None:
+        """Copy one cached KV block (host numpy rows) into a slot's span —
+        the radix attach: cached prefix blocks land without recompute."""
+        lo = block_idx * self.e.block_size
+
+        def flat_at(dst, src):
+            return dst.at[slot, lo:lo + src.shape[0]].set(
+                jnp.asarray(src).astype(dst.dtype))
+
+        def stacked_at(dst, src):
+            return dst.at[:, slot, lo:lo + src.shape[1]].set(
+                jnp.asarray(src).astype(dst.dtype))
+
+        new = dict(self.caches)
+        new["head"] = [jax.tree.map(flat_at, d, s)
+                       for d, s in zip(self.caches["head"], block_kv["head"])]
+        if "stack" in self.caches:
+            new["stack"] = jax.tree.map(stacked_at, self.caches["stack"],
+                                        block_kv["stack"])
+        new["tail"] = [jax.tree.map(flat_at, d, s)
+                       for d, s in zip(self.caches["tail"], block_kv["tail"])]
+        self.caches = new
+
     # ---- time ------------------------------------------------------------
 
     def now(self) -> float:
+        """Engine wall clock: monotonic seconds since construction, scaled
+        by ``time_scale`` when set (so trace timestamps can be replayed
+        faster than real time)."""
         if self.e.time_scale <= 0:
             return time.monotonic() - self._t0
         return (time.monotonic() - self._t0) * self.e.time_scale
@@ -174,8 +345,37 @@ class ServingEngine:
         waiting = self.sched.snapshot(now).waiting_tokens
         return waiting / self._prefill_tok_rate
 
+    def _stamp_prefix(self, req: Request) -> None:
+        """Chunked/prefix mode: materialize prompt tokens up front (the
+        chunk cursor needs them before dispatch), hash them, and stamp the
+        queue-side ``cached_len`` *estimate* from a read-only radix probe —
+        the same submit-time stamp the cluster router applies, so EWSJF
+        queues and scores this engine's requests on effective length.  The
+        authoritative resolution happens at dispatch (``_attach_prefix``)."""
+        if req.prompt_tokens is None:
+            rng = np.random.default_rng(req.request_id)
+            req.prompt_tokens = rng.integers(
+                0, self.cfg.vocab_size, size=(req.prompt_len,)).astype(np.int32)
+        else:
+            req.prompt_tokens = np.asarray(req.prompt_tokens, dtype=np.int32)
+        if self.radix is None:
+            return
+        if req.prompt_hashes is None:
+            from ..kvplane.radix import chain_block_hashes
+            req.prompt_hashes = chain_block_hashes(req.prompt_tokens.tolist(),
+                                                   self.e.block_size)
+        blocks = self.radix.match(req.prompt_hashes, touch=False).blocks
+        req.cached_len = min(blocks * self.e.block_size,
+                             int(req.prompt_len) - 1)
+
     def add_request(self, req: Request) -> None:
+        """Ingress one request: stamp its prefix estimate (chunked/prefix
+        mode), pass it through the admission controller when present
+        (shed / defer / admit), and submit admitted requests to the
+        scheduler queue."""
         now = self.now()
+        if self._chunked:
+            self._stamp_prefix(req)
         if self.obs is not None:
             self.obs.event("arrival", now, request_id=req.request_id)
             self.obs.inc("requests_arrived_total",
@@ -232,7 +432,9 @@ class ServingEngine:
                 self.sched.maybe_reoptimize(now)
             self._maybe_sync_policy(now)
             self._admit(now)
-            if not self.slot_state and self.sched.waiting() == 0 and pi < n_total:
+            self._prefill_chunk_tick(now)
+            if (not self.slot_state and not self._prefilling
+                    and self.sched.waiting() == 0 and pi < n_total):
                 continue
             self._decode_tick()
         return self.finished
@@ -258,6 +460,9 @@ class ServingEngine:
                              block_size=self.e.block_size)
         plan = self.sched.tick(now, budget)
         if not plan.requests:
+            return
+        if self._chunked:
+            self._admit_chunked(plan.requests, now)
             return
         reqs = [r for r in plan.requests if r.prompt_len <= self.e.s_max - 1]
         if not reqs:
@@ -308,6 +513,8 @@ class ServingEngine:
             self._write_slot(slot, caches, i)
             r.state = RequestState.RUNNING_DECODE
             r.first_token_time = t_first
+            self.dispatch_log.append((t_pf0, r.request_id))
+            self._slot_last_tok[slot] = t_first
             if self.obs is not None:
                 wait = max(0.0, t_pf0 - r.arrival_time)
                 self.obs.event("dispatch", t_pf0, request_id=r.request_id,
@@ -317,6 +524,7 @@ class ServingEngine:
                 self.obs.event("first_token", t_first,
                                request_id=r.request_id)
             r.generated = 1
+            self.output_tokens[r.request_id] = [int(first[i, 0])]
             self.slot_pos[slot] = r.prompt_len
             self.last_tokens[slot, 0] = first[i, 0]
             self.slot_state[slot] = _SlotState(
@@ -335,30 +543,207 @@ class ServingEngine:
         def stacked(dst, src):
             return dst.at[:, slot].set(src[:, row].astype(dst.dtype))
 
-        new = dict(self.caches)
-        new["head"] = [jax.tree.map(flat, d, s)
-                       for d, s in zip(self.caches["head"],
-                                       prefill_caches["head"])]
-        if "stack" in self.caches:
-            new["stack"] = jax.tree.map(stacked, self.caches["stack"],
-                                        prefill_caches["stack"])
-        new["tail"] = [jax.tree.map(flat, d, s)
-                       for d, s in zip(self.caches["tail"],
-                                       prefill_caches["tail"])]
-        self.caches = new
+        self._map_into_caches(prefill_caches, flat, stacked)
+
+    # ---- chunked admission + prefill (convergence mode) -------------------
+
+    def _attach_prefix(self, r: Request, slot: int, now: float
+                       ) -> tuple[int, int, object]:
+        """Authoritative prefix resolution for one dispatched request —
+        the engine-side mirror of the cluster replica's ``_prefix_attach``:
+        match the radix, copy every matched block whose KV content is
+        host-resident into the slot caches, then insert + pin the request's
+        *full* prompt path (blocks computed this pass are about to exist;
+        their content lands at prefill completion).  Returns
+        ``(cached_tokens, resident_blocks, pin_node)``."""
+        if self.radix is None or not r.prompt_hashes:
+            r.cached_len = 0
+            return 0, 0, None
+        bs = self.e.block_size
+        hashes = r.prompt_hashes
+        m = self.radix.match(hashes, now)
+        path: list = []
+        node = m.node
+        while node is not None and node.depth > 0:
+            path.append(node)
+            node = node.parent
+        path.reverse()
+        # Usable = contiguous matched blocks with host KV content, capped so
+        # at least one suffix token remains to produce the first logit.
+        max_blocks = (int(r.prompt_len) - 1) // bs
+        usable = 0
+        for nd in path[:max_blocks]:
+            if nd.node_id not in self._node_kv:
+                break
+            usable += 1
+        full_blocks = int(r.prompt_len) // bs
+        pin_node, _ = self.radix.insert(hashes[:full_blocks], now)
+        self.radix.pin(pin_node)
+        resident = pin_node.depth if pin_node is not None else 0
+        for i in range(usable):
+            self._write_block(slot, i, self._node_kv[path[i].node_id])
+        cached_tokens = usable * bs
+        r.cached_len = cached_tokens
+        self.prefix_saved_tokens += cached_tokens
+        return cached_tokens, resident, pin_node
+
+    def _admit_chunked(self, reqs: list, now: float) -> None:
+        """Admit dispatched requests into slots as chunk-prefill jobs: take
+        a slot, resolve + attach the cached prefix, allocate the private
+        (uncached) KV up front, and park the request in ``_prefilling`` —
+        ``_prefill_chunk_tick`` then advances cursors under the chunk
+        budget, interleaved with decode."""
+        bs = self.e.block_size
+        for r in reqs:
+            if r.prompt_len > self.e.s_max - 1:
+                continue                 # same oversize filter as legacy
+            slot = self.slots.acquire(r.request_id)
+            assert slot is not None      # budget.max_requests == free slots
+            r.state = RequestState.RUNNING_PREFILL
+            # Park the slot's decode cursor at the scratch position: the
+            # global decode step runs over *all* slot rows, and its cache
+            # write for this row must not land inside the prompt span being
+            # chunk-prefilled.  s_max-1 is causally masked for every live
+            # sequence until its own final step overwrites it.
+            self.slot_pos[slot] = self.e.s_max - 1
+            self.last_tokens[slot, 0] = 0
+            cached, resident, pin_node = self._attach_prefix(r, slot, now)
+            # Private allocation = prompt KV minus radix-resident blocks
+            # (replica accounting: unchecked — admission was guarded on the
+            # *estimate*; transient overdraw is reclaimed by decode-time
+            # preemption).
+            private = max(int(r.prompt_len) - resident * bs, 0)
+            self.pool.allocate_unchecked(r.request_id, private)
+            cap = resident * bs + self.pool.blocks_for(private) * bs
+            self._prefilling[slot] = _PrefillState(
+                req=r, seq_id=r.request_id, pos=cached,
+                pin_node=pin_node, cap_tokens=cap, t_dispatch=now)
+            self.dispatch_log.append((now, r.request_id))
+            if self.obs is not None:
+                wait = max(0.0, now - r.arrival_time)
+                self.obs.event("dispatch", now, request_id=r.request_id,
+                               data={"wait": round(wait, 6),
+                                     "cached_tokens": cached})
+                self.obs.observe("sched_dispatch_wait_seconds", wait,
+                                 {"slo_class": self.obs.classify(r)})
+
+    def _prefill_chunk_tick(self, now: float) -> None:
+        """Advance every in-flight chunked prefill under the per-tick token
+        budget (admission order — FIFO across slots), promoting completed
+        prompts to decode.  One tick spends at most ``chunk_prefill_tokens``
+        (or ``max_prefill_tokens`` in pure prefix-reuse mode) prefill
+        tokens, so decoding sequences wait at most one chunk per tick —
+        this is the TBT bound the chunked-prefill bench measures."""
+        if not self._prefilling:
+            return
+        left = self._chunk_budget
+        completed: list[tuple[int, object]] = []
+        for slot in list(self._prefilling):
+            if left <= 0:
+                break
+            st = self._prefilling[slot]
+            r = st.req
+            width = min(int(r.prompt_len) - st.pos, left)
+            left -= width
+            toks = np.asarray(r.prompt_tokens[st.pos:st.pos + width],
+                              dtype=np.int32)[None]
+            fresh_jit = width not in self._chunk_jits
+            fn = self._get_chunk_jit(width)
+            t0 = self.now()
+            logits, new_sl = fn(self.params, jnp.asarray(toks),
+                                self._slice_slot(slot), jnp.int32(st.pos))
+            self._write_slot(slot, new_sl, 0)
+            st.pos += width
+            t1 = self.now()
+            self.chunks_run += 1
+            self.chunk_tokens += width
+            self.real_tokens += width
+            self.padded_tokens += width      # chunk path pads nothing
+            if not fresh_jit:
+                rate = width / max(t1 - t0, 1e-6)
+                self._prefill_tok_rate = (
+                    rate if self._prefill_tok_rate <= 0 else
+                    0.7 * self._prefill_tok_rate + 0.3 * rate)
+            if self.obs is not None:
+                self.obs.event("prefill", t0, dur=max(t1 - t0, 0.0),
+                               data={"batch": 1, "suffix_tokens": width,
+                                     "cached_tokens": int(r.cached_len),
+                                     "chunk": width})
+            if st.pos >= int(r.prompt_len):
+                completed.append((slot, logits))
+        for slot, logits in completed:
+            self._promote_slot(slot, logits)
+
+    def _promote_slot(self, slot: int, logits) -> None:
+        """Chunked prefill finished: publish computed prefix blocks to the
+        radix host store, sample the first token, move the slot to decode."""
+        st = self._prefilling.pop(slot)
+        r = st.req
+        if self.radix is not None and st.pin_node is not None:
+            path: list = []
+            node = st.pin_node
+            while node is not None and node.depth > 0:
+                path.append(node)
+                node = node.parent
+            path.reverse()
+            for i, nd in enumerate(path):
+                if nd.node_id not in self._node_kv:
+                    self._node_kv[nd.node_id] = self._extract_block(slot, i)
+        self._key, sk = jax.random.split(self._key)
+        first = np.asarray(sample_tokens(logits, sk,
+                                         temperature=self.e.temperature))
+        t = self.now()
+        r.state = RequestState.RUNNING_DECODE
+        r.first_token_time = t
+        r.generated = 1
+        if self.obs is not None:
+            self.obs.event("first_token", t, request_id=r.request_id)
+        self.output_tokens[r.request_id] = [int(first[0, 0])]
+        self.slot_pos[slot] = int(r.prompt_len)
+        self.last_tokens[slot, 0] = first[0, 0]
+        self._slot_last_tok[slot] = t
+        self.slot_state[slot] = _SlotState(
+            req=r, seq_id=st.seq_id, budget_left=r.max_new_tokens - 1,
+            pin_node=st.pin_node, cap_tokens=st.cap_tokens)
+        if r.max_new_tokens <= 1:
+            self._finish_slot(slot)
 
     # ---- decode -------------------------------------------------------------
+
+    def _grow_chunked(self, slot: int, st: _SlotState) -> None:
+        """Per-slot KV growth in chunked/prefix mode: capacity is tracked in
+        ``cap_tokens`` (radix-resident + private blocks); one private block
+        is appended when the next token would exceed it.  Under pressure the
+        radix sheds a cold cached block first (running sequences outrank the
+        prefix cache), then LIFO recompute preemption applies as in legacy."""
+        total = int(self.slot_pos[slot]) + 1
+        if total <= st.cap_tokens:
+            return
+        if self.pool.free_blocks < 1 and self.radix is not None:
+            self.radix.evict(1)
+        if self.pool.free_blocks >= 1 or len(self.slot_state) <= 1:
+            self.pool.allocate_unchecked(st.seq_id, self.e.block_size)
+            st.cap_tokens += self.e.block_size
+        else:
+            self._preempt_slot(slot)
 
     def _decode_tick(self) -> None:
         if not self.slot_state:
             return
+        if self._prefilling:
+            self.interleaved_ticks += 1
+        t_tick0 = self.now()
+        steps = 0
         for _ in range(self.e.decode_steps_per_tick):
             if not self.slot_state:
                 break
             # paged growth accounting (+ LIFO recompute preemption)
             for slot in sorted(self.slot_state, reverse=True):
                 st = self.slot_state[slot]
-                if not self.pool.grow(st.seq_id, int(self.slot_pos[slot]) + 1):
+                if self._chunked:
+                    self._grow_chunked(slot, st)
+                elif not self.pool.grow(st.seq_id,
+                                        int(self.slot_pos[slot]) + 1):
                     if len(self.slot_state) > 1:
                         self._preempt_slot(slot)
                     # else: single sequence — let it run (pool undersized)
@@ -370,26 +755,42 @@ class ServingEngine:
             nxt = np.asarray(sample_tokens(logits, sk,
                                            temperature=self.e.temperature))
             t = self.now()
+            steps += 1
             done = []
             for slot, st in self.slot_state.items():
                 self.slot_pos[slot] += 1
                 self.last_tokens[slot, 0] = nxt[slot, 0]
+                self.output_tokens.setdefault(
+                    st.req.request_id, []).append(int(nxt[slot, 0]))
                 st.req.generated += 1
                 st.budget_left -= 1
+                if self._slot_last_tok[slot] >= 0:
+                    self.decode_gaps.append(t - self._slot_last_tok[slot])
+                self._slot_last_tok[slot] = t
                 if st.budget_left <= 0 or self.slot_pos[slot] >= self.e.s_max - 1:
                     done.append(slot)
             for slot in done:
                 self._finish_slot(slot)
+        if self.obs is not None and steps:
+            t_end = self.now()
+            self.obs.event("decode", t_tick0, dur=max(t_end - t_tick0, 0.0),
+                           data={"batch": len(self.slot_state),
+                                 "steps": steps})
+            self.obs.gauge("kv_occupancy", v=self.pool.utilization)
 
     def _preempt_slot(self, slot: int) -> None:
         st = self.slot_state.pop(slot)
         self.pool.free(st.seq_id)
+        if self.radix is not None and st.pin_node is not None:
+            self.radix.unpin(st.pin_node)
         self.slots.release(slot)
+        self._slot_last_tok[slot] = -1.0
         req = st.req
         req.state = RequestState.PREEMPTED
         req.preemptions += 1
         req.generated = 0
         req.first_token_time = None
+        self.output_tokens.pop(req.request_id, None)   # recompute restarts
         self.preemptions += 1
         self.sched.submit(req, now=self.now())
         if self.obs is not None:
@@ -403,7 +804,10 @@ class ServingEngine:
         if req is None:
             return
         self.pool.free(st.seq_id)
+        if self.radix is not None and st.pin_node is not None:
+            self.radix.unpin(st.pin_node)
         self.slots.release(slot)
+        self._slot_last_tok[slot] = -1.0
         req.state = RequestState.FINISHED
         req.finish_time = self.now()
         req.terminal = TerminalState.FINISHED
@@ -415,6 +819,9 @@ class ServingEngine:
     # ---- stats ---------------------------------------------------------------
 
     def stats(self) -> dict:
+        """Run summary: throughput, terminal accounting, padding waste,
+        chunked-prefill / prefix-reuse counters, radix stats, and the
+        decode inter-token-gap (TBT) percentiles."""
         elapsed = self.now()
         toks = sum(r.generated for r in self.finished)
         # unified terminal accounting (Request.terminal stamps)
@@ -438,4 +845,13 @@ class ServingEngine:
             "prefill_batches": self.prefill_batches,
             "padding_waste": (1.0 - self.real_tokens
                               / max(self.padded_tokens, 1)),
+            "chunks": self.chunks_run,
+            "chunk_tokens": self.chunk_tokens,
+            "interleaved_ticks": self.interleaved_ticks,
+            "prefix_saved_tokens": self.prefix_saved_tokens,
+            "radix": (self.radix.stats() if self.radix is not None else {}),
+            "decode_tbt_p95": (float(np.percentile(self.decode_gaps, 95))
+                               if self.decode_gaps else 0.0),
+            "decode_tbt_max": (float(max(self.decode_gaps))
+                               if self.decode_gaps else 0.0),
         }

@@ -25,6 +25,10 @@ from typing import Optional
 
 @dataclass
 class BlockPool:
+    """Host-side paged KV accounting: a fixed budget of fixed-size blocks,
+    allocated per sequence id.  Admission reads ``free_blocks``; decode
+    growth that cannot be satisfied triggers preemption upstream."""
+
     total_blocks: int
     block_size: int = 16
     free_blocks: int = field(init=False)
@@ -34,12 +38,15 @@ class BlockPool:
         self.free_blocks = self.total_blocks
 
     def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` KV entries (ceil division)."""
         return -(-tokens // self.block_size)
 
     def can_allocate(self, tokens: int) -> bool:
+        """True when ``tokens`` worth of blocks fit in the free pool."""
         return self.blocks_for(tokens) <= self.free_blocks
 
     def allocate(self, seq_id: int, tokens: int) -> bool:
+        """Guarded allocation for a sequence; False (no-op) on exhaustion."""
         need = self.blocks_for(tokens)
         if need > self.free_blocks:
             return False
@@ -71,15 +78,21 @@ class BlockPool:
         return True
 
     def free(self, seq_id: int) -> None:
+        """Return every block owned by ``seq_id`` to the pool."""
         self.free_blocks += self.allocs.pop(seq_id, 0)
 
     @property
     def utilization(self) -> float:
+        """Fraction of the pool currently allocated (0.0–1.0)."""
         return 1.0 - self.free_blocks / max(self.total_blocks, 1)
 
 
 @dataclass
 class SlotAllocator:
+    """Fixed decode-slot bookkeeping: each active sequence owns one batch
+    row of the compiled decode step; lowest free slot is handed out first
+    so compiled shapes stay stable."""
+
     n_slots: int
     free: list = field(default_factory=list)
     owner: dict = field(default_factory=dict)     # slot -> seq_id
@@ -88,6 +101,7 @@ class SlotAllocator:
         self.free = list(range(self.n_slots))
 
     def acquire(self, seq_id: int) -> Optional[int]:
+        """Claim the lowest free slot for ``seq_id``; None when full."""
         if not self.free:
             return None
         slot = self.free.pop(0)
@@ -95,9 +109,11 @@ class SlotAllocator:
         return slot
 
     def release(self, slot: int) -> None:
+        """Return a slot to the free list (kept sorted for lowest-first)."""
         self.owner.pop(slot, None)
         self.free.append(slot)
         self.free.sort()
 
     def active_slots(self) -> list:
+        """Sorted list of slots currently owned by a sequence."""
         return sorted(self.owner)

@@ -1,0 +1,206 @@
+"""DES↔engine convergence: chunked prefill, engine-side radix reuse, and
+the replay-equivalence harness (serving/replay.py; docs/ENGINE.md)."""
+
+import jax
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # real JAX serving-engine execution
+
+from repro.configs import get_smoke_config
+from repro.core import FCFSScheduler, Request
+from repro.models import chunk_step, init_params, prefill, supports_chunked_decode
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.replay import (TAU_BOUND, burst_trace, kendall_tau,
+                                  replay_ok, run_replay)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("llama2-13b")       # dense full-attention
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(n=6, seed=0, vocab=256, max_new=6, lo=40, hi=100, base=0,
+              prefix=None):
+    out = []
+    for i in range(n):
+        rng = np.random.default_rng(seed * 1000 + i)
+        pl = int(rng.integers(lo, hi))
+        toks = rng.integers(0, vocab, size=(pl,)).astype(np.int32)
+        if prefix is not None:
+            toks[:min(len(prefix), pl - 8)] = prefix[:min(len(prefix), pl - 8)]
+        out.append(Request(request_id=base + i, arrival_time=0.0,
+                           prompt_len=pl, max_new_tokens=max_new,
+                           prompt_tokens=toks))
+    return out
+
+
+def _run(cfg, params, ecfg, reqs, sched=None):
+    eng = ServingEngine(cfg, params, sched or FCFSScheduler(), ecfg)
+    eng.run(reqs, max_steps=4000)
+    return eng
+
+
+# ---- model level ----------------------------------------------------------
+
+def test_chunk_step_matches_prefill(model):
+    """Chunked prefill is numerically the batch prefill: feeding the prompt
+    through chunk_step in pieces yields the same final logits (dense
+    configs; MoE capacity-dropping is batch-shape dependent — see
+    docs/ENGINE.md)."""
+    cfg, params = model
+    assert supports_chunked_decode(cfg)
+    import jax.numpy as jnp
+
+    from repro.models import DtypePolicy, init_decode_caches
+    f32 = DtypePolicy(jnp.float32, jnp.float32, jnp.float32)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(1, 57)).astype(np.int32)
+    ref_logits, _ = prefill(params, {"tokens": toks}, cfg, policy=f32)
+    caches = init_decode_caches(cfg, 1, 128, dtype=np.float32)
+    pos = 0
+    for width in (16, 16, 16, 9):
+        chunk = toks[:, pos:pos + width]
+        logits, caches = chunk_step(params, chunk, caches,
+                                    np.int32(pos), cfg, policy=f32)
+        pos += width
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               atol=5e-5)
+
+
+# ---- replay harness -------------------------------------------------------
+
+def test_kendall_tau():
+    assert kendall_tau([1, 2, 3], [1, 2, 3]) == 1.0
+    assert kendall_tau([1, 2, 3], [3, 2, 1]) == -1.0
+    assert kendall_tau([1], [1]) == 1.0
+    assert abs(kendall_tau([1, 2, 3, 4], [2, 1, 3, 4]) - 2 / 3) < 1e-9
+
+
+def test_dispatch_order_matches_des(model):
+    """Policy-pure schedulers (FCFS, SJF) must dispatch in exactly the DES
+    order: both executors run the same scheduler + BatchBuilder code, and a
+    saturated burst removes every timing degree of freedom."""
+    cfg, params = model
+    trace = burst_trace(n=8, seed=0, vocab_size=cfg.vocab_size)
+    for sched in ("fcfs", "sjf"):
+        rep = run_replay(trace, sched, params=params, cfg=cfg)
+        assert rep["dispatch_match"], \
+            (sched, rep["des_dispatch"], rep["engine_dispatch"])
+        assert rep["ttft_tau"] == 1.0
+        assert replay_ok(rep)
+
+
+def test_ewsjf_rank_correlation_bound(model):
+    """EWSJF couples scores to wall-clock waits, so exact order equality is
+    not required — rank correlation must stay within the documented bound."""
+    cfg, params = model
+    trace = burst_trace(n=8, seed=0, vocab_size=cfg.vocab_size)
+    rep = run_replay(trace, "ewsjf", params=params, cfg=cfg)
+    assert rep["dispatch_tau"] >= TAU_BOUND
+    assert replay_ok(rep)
+
+
+# ---- chunked prefill ------------------------------------------------------
+
+def test_chunked_outputs_identical(model):
+    """Greedy outputs are bit-identical between the legacy bucketed path
+    and chunked prefill (write-then-mask chunk attention is exact)."""
+    cfg, params = model
+    base = dict(max_slots=4, s_max=256, kv_pool_tokens=16384)
+    e_leg = _run(cfg, params, EngineConfig(**base), _requests(seed=1))
+    e_chk = _run(cfg, params,
+                 EngineConfig(**base, chunk_prefill_tokens=24),
+                 _requests(seed=1))
+    assert e_leg.output_tokens == e_chk.output_tokens
+    assert e_chk.stats()["chunks"] > len(e_chk.finished)  # really chunked
+
+
+def test_chunked_interleaves_decode(model):
+    """The TBT bound: with a long prompt arriving behind short ones,
+    chunked mode runs decode ticks *while* the long prefill is in flight;
+    the legacy path by construction never does."""
+    cfg, params = model
+    reqs = _requests(n=3, seed=2, lo=16, hi=32, max_new=24)
+    reqs.append(Request(request_id=99, arrival_time=0.0, prompt_len=200,
+                        max_new_tokens=4,
+                        prompt_tokens=np.arange(200, dtype=np.int32) % 256))
+    e = _run(cfg, params,
+             EngineConfig(max_slots=4, s_max=256, kv_pool_tokens=16384,
+                          chunk_prefill_tokens=16),
+             reqs)
+    assert len(e.finished) == 4
+    assert e.interleaved_ticks > 0
+
+
+def test_unchunked_rejects_unsupported_family(model):
+    cfg = get_smoke_config("recurrentgemma-9b")   # ring/rglru stack
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, FCFSScheduler(),
+                      EngineConfig(chunk_prefill_tokens=16))
+
+
+# ---- engine-side radix reuse ----------------------------------------------
+
+def test_radix_two_wave_reuse(model):
+    """Second wave of shared-prefix requests attaches cached KV (cached_len
+    stamped at block granularity) and still produces the exact radix-off
+    greedy outputs."""
+    cfg, params = model
+    pfx = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, size=(48,)).astype(np.int32)
+    ecfg = EngineConfig(max_slots=4, s_max=256, kv_pool_tokens=16384,
+                        enable_prefix_cache=True)
+    e = _run(cfg, params, ecfg,
+             _requests(seed=3, prefix=pfx) +
+             _requests(seed=3, prefix=pfx, base=10))
+    wave2 = [r for r in e.finished if r.request_id >= 10]
+    assert len(wave2) == 6
+    assert all(r.cached_len > 0 for r in wave2)
+    assert e.prefix_saved_tokens > 0
+    e.radix.check_invariants()
+    e_off = _run(cfg, params,
+                 EngineConfig(max_slots=4, s_max=256, kv_pool_tokens=16384,
+                              chunk_prefill_tokens=1024),
+                 _requests(seed=3, prefix=pfx, base=10))
+    for r in wave2:
+        assert e.output_tokens[r.request_id] == \
+            e_off.output_tokens[r.request_id]
+
+
+def test_radix_preempt_no_leak(model):
+    """Preemption + re-admission under KV pressure neither leaks pool
+    blocks nor strands radix pins: after the run every non-radix alloc is
+    freed and the tree invariants hold."""
+    cfg, params = model
+    ecfg = EngineConfig(max_slots=4, s_max=256,
+                        kv_pool_tokens=256,            # tiny pool
+                        enable_prefix_cache=True,
+                        prefix_cache_blocks=8)
+    reqs = _requests(n=6, seed=4, lo=60, hi=100, max_new=24)
+    e = _run(cfg, params, ecfg, reqs)
+    assert len(e.finished) == 6
+    assert e.preemptions > 0
+    seq_allocs = {k: v for k, v in e.pool.allocs.items()
+                  if not isinstance(k, tuple)}
+    assert seq_allocs == {}                    # only radix tenancy remains
+    e.radix.check_invariants()
+    for node in e.radix._nodes.values():
+        assert node.pins == 0                  # no stranded in-flight pins
+
+
+def test_chunked_preempt_no_leak(model):
+    """Same leak check for chunked mode without the radix (cap_tokens
+    growth accounting must free exactly what it allocated)."""
+    cfg, params = model
+    ecfg = EngineConfig(max_slots=4, s_max=256, kv_pool_tokens=256,
+                        chunk_prefill_tokens=32)
+    reqs = _requests(n=6, seed=5, lo=60, hi=100, max_new=10)
+    e = _run(cfg, params, ecfg, reqs)
+    assert len(e.finished) == 6
+    assert e.preemptions > 0
+    assert e.pool.allocs == {}
+    assert e.pool.free_blocks == e.pool.total_blocks

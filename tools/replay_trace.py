@@ -1,0 +1,62 @@
+"""Replay one recorded arrival trace through the DES and the real engine.
+
+Thin CLI over :mod:`repro.serving.replay` — the DES↔engine equivalence
+harness (docs/ENGINE.md documents the methodology and what each bound
+means).  Prints a per-scheduler divergence table and optionally writes the
+full JSON report (the artifact CI uploads).
+
+    PYTHONPATH=src python tools/replay_trace.py --quick --json replay.json
+
+Exits 1 when any scheduler violates its documented bound (exact dispatch
+equality for FCFS/SJF; rank correlation >= TAU_BOUND for EWSJF).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.serving.replay import replay_ok, run_suite  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=12,
+                    help="requests in the burst trace")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="llama2-13b",
+                    help="smoke-config architecture (dense attention only)")
+    ap.add_argument("--schedulers", default="fcfs,sjf,ewsjf",
+                    help="comma-separated scheduler registry names")
+    ap.add_argument("--quick", action="store_true",
+                    help="small trace for CI (n=8)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full divergence report as JSON")
+    args = ap.parse_args()
+    n = 8 if args.quick else args.n
+
+    suite = run_suite(n=n, seed=args.seed, arch=args.arch,
+                      schedulers=tuple(args.schedulers.split(",")))
+    print(f"replay equivalence: arch={suite['arch']} "
+          f"n={suite['n_requests']} seed={suite['seed']}")
+    print(f"{'scheduler':>10} {'dispatch':>9} {'tau':>6} "
+          f"{'ttft_tau':>8} {'bound':>14} {'ok':>4}")
+    for r in suite["reports"]:
+        bound = "exact" if r["exact_required"] else f"tau>={r['tau_bound']}"
+        ok = replay_ok(r)
+        print(f"{r['scheduler']:>10} "
+              f"{'match' if r['dispatch_match'] else 'diverge':>9} "
+              f"{r['dispatch_tau']:>6.3f} {r['ttft_tau']:>8.3f} "
+              f"{bound:>14} {'yes' if ok else 'NO':>4}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(suite, indent=2))
+        print(f"wrote {args.json}")
+    return 0 if suite["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
