@@ -1,7 +1,8 @@
 """Real-engine convergence benchmark (beyond-paper): DES↔engine replay
-divergence + the chunked-prefill TBT bound, on the real JAX engine.
+divergence, the chunked-prefill TBT bound, engine observability overhead,
+and the cost/predictor calibration section — all on the real JAX engine.
 
-Two sections:
+Four sections:
 
   * ``replay`` — the serving/replay.py equivalence harness: one saturated
     burst trace through the DES and the real engine under every scheduler;
@@ -14,14 +15,33 @@ Two sections:
     was in flight).  The structural claim — chunked mode interleaves,
     legacy never does — is deterministic; the wall-clock gap numbers are
     report-only (CPU timing noise; no regression gate).
+  * ``engine_obs_overhead`` — the engine-side mirror of the cluster
+    bench's obs-overhead gate: the same chunked workload run with
+    ``obs=None`` vs a full calibration-enabled ``Observability``, paired
+    back-to-back per repeat under ``time.process_time`` with alternating
+    mode order, reporting the *median pair ratio* — gated as
+    ``engine_obs_overhead_ratio`` ≤ baseline (+tolerance) by
+    check_regression.py.  Sampled token ids must match exactly between
+    modes (the bit-identity contract, also property-tested in
+    tests/test_engine_obs.py).
+  * ``calibration`` — a deterministic quick engine run with the
+    calibration plane attached: reports per-op-class post-fit residual
+    ratios (claim: p50 ∈ [0.8, 1.25] for every class the fit converged
+    on) and the length-predictor's relative ECE; ``--calib-json`` writes
+    the full calibration payload (``BENCH_calib.json``) and ``--trace``
+    writes a Perfetto-loadable engine trace sample — the CI quick-bench
+    artifacts.
 
 CLI: ``python -m benchmarks.bench_engine_convergence [--quick] [--json
-PATH]`` — CI uploads the JSON (``BENCH_engine.json``) as an artifact.
+PATH] [--calib-json PATH] [--trace PATH]`` — CI uploads the JSONs
+(``BENCH_engine.json``, ``BENCH_calib.json``) as artifacts.
 """
 
 from __future__ import annotations
 
 import argparse
+import copy
+import gc
 import json
 import time
 
@@ -72,7 +92,135 @@ def _tbt_run(cfg, params, reqs, chunk) -> dict:
             "chunks": s["chunks"]}
 
 
-def main(quick: bool = False, json_path: str | None = None) -> dict:
+def measure_engine_obs_overhead(cfg, params, quick: bool = False) -> dict:
+    """Paired-median obs-overhead estimate on the real chunked engine.
+
+    Same methodology as ``bench_cluster_routing.measure_obs_overhead``
+    (PR 6): per repeat, both modes run back-to-back under
+    ``time.process_time`` (CPU time — includes XLA compile on both sides
+    equally, immune to wall-clock preemption), with ``gc.collect()``
+    before each timed region and the mode order alternating per repeat;
+    the reported ratio is the median of the per-pair ratios.  Sampled
+    token ids are additionally checked identical across modes — obs must
+    never move a sampling decision."""
+    from repro.obs import Observability
+    repeats = 3 if quick else 5
+    workload = _tbt_workload(cfg, 3, 1, seed=11)
+
+    def run_once(obs):
+        ecfg = EngineConfig(max_slots=4, s_max=256, kv_pool_tokens=16384,
+                            chunk_prefill_tokens=32)
+        wl = copy.deepcopy(workload)
+        gc.collect()
+        t0 = time.process_time()
+        eng = ServingEngine(cfg, params, FCFSScheduler(), ecfg, obs=obs)
+        eng.run(wl, max_steps=6000)
+        return time.process_time() - t0, dict(eng.output_tokens)
+
+    ratios = []
+    base_best = obs_best = float("inf")
+    identical = True
+    trace_events = 0
+    for i in range(repeats):
+        obs = Observability.enabled(calibration=True)
+        if i % 2 == 0:
+            b, toks_b = run_once(None)
+            o, toks_o = run_once(obs)
+        else:
+            o, toks_o = run_once(obs)
+            b, toks_b = run_once(None)
+        identical = identical and toks_b == toks_o
+        ratios.append(o / max(b, 1e-9))
+        base_best = min(base_best, b)
+        obs_best = min(obs_best, o)
+        trace_events = obs.trace.stats()["events_emitted"]
+    ratios.sort()
+    ratio = ratios[len(ratios) // 2]
+    return {"engine_obs_overhead_ratio": ratio,
+            "base_ms": base_best * 1e3, "obs_ms": obs_best * 1e3,
+            "pair_ratios": [round(r, 4) for r in ratios],
+            "repeats": repeats, "trace_events": trace_events,
+            "tokens_identical": identical,
+            "claim_ok": identical and ratio <= 1.10}
+
+
+def _calib_workload(cfg, n: int, seed: int = 0):
+    """Deterministic calibration workload: uniform 96-token prompts (so
+    chunk widths repeat and fresh-JIT samples are rare) sharing a 64-token
+    prefix (so later dispatches exercise the radix attach path)."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=(64,)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, size=(32,)).astype(np.int32)
+        reqs.append(Request(
+            request_id=i, arrival_time=0.0, prompt_len=96,
+            max_new_tokens=8,
+            prompt_tokens=np.concatenate([shared, tail])))
+    return reqs
+
+
+def calibration_section(cfg, params, quick: bool = False,
+                        calib_json: str | None = None,
+                        trace_path: str | None = None) -> dict:
+    """One calibration-enabled engine run: oracle-noise length predictions
+    stamped at ingress, chunked prefill + radix reuse on, the full obs
+    bundle attached.  Reports the per-op-class *post-fit* residual ratio
+    (median of measured / corrected-prediction over the recent window; a
+    converged fit sits near 1.0 — the claim gates p50 ∈ [0.8, 1.25] for
+    every class with enough samples to export a correction) and the
+    length predictor's relative ECE/coverage/bias."""
+    from repro.obs import Observability
+    from repro.predict import OracleNoisePredictor
+    n = 6 if quick else 12
+    reqs = _calib_workload(cfg, n, seed=5)
+    predictor = OracleNoisePredictor(sigma=0.1, seed=3)
+    for r in reqs:
+        predictor.annotate(r, 0.0)
+    obs = Observability.enabled(calibration=True)
+    ecfg = EngineConfig(max_slots=4, s_max=256, kv_pool_tokens=16384,
+                        chunk_prefill_tokens=32, enable_prefix_cache=True)
+    eng = ServingEngine(cfg, params, FCFSScheduler(), ecfg, obs=obs)
+    eng.run(reqs, max_steps=6000)
+
+    calib = obs.calib.report()
+    correction = obs.calib.correction()
+    residual = {op: round(row["residual"].get("p50", 0.0), 4)
+                for op, row in calib.items()}
+    converged = {op: residual[op] for op in correction}
+    claim_ok = bool(converged) and all(
+        0.8 <= p50 <= 1.25 for p50 in converged.values())
+    pred_snap = obs.pred_calib.snapshot()
+    section = {
+        "n_requests": n,
+        "finished": len(eng.finished),
+        "residual_p50": residual,
+        "converged_classes": sorted(correction),
+        "samples": {op: row["n"] for op, row in calib.items()},
+        "predictor_ece": round(pred_snap["ece"], 4),
+        "predictor_coverage": round(pred_snap["coverage"], 4),
+        "predictor_bias": round(pred_snap["bias"], 4),
+        "claim_ok": claim_ok,
+    }
+    if calib_json:
+        payload = {
+            "arch": ARCH,
+            "summary": section,
+            "cost_calibration": obs.calib.snapshot(),
+            "predictor_calibration": pred_snap,
+        }
+        with open(calib_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {calib_json}")
+    if trace_path:
+        obs.trace.dump_chrome_trace(trace_path)
+        print(f"# wrote {trace_path} (open at https://ui.perfetto.dev)")
+    return section
+
+
+def main(quick: bool = False, json_path: str | None = None,
+         calib_json: str | None = None,
+         trace_path: str | None = None) -> dict:
     report: dict = {"arch": ARCH, "scenarios": {}}
     cfg = get_smoke_config(ARCH)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -113,6 +261,27 @@ def main(quick: bool = False, json_path: str | None = None) -> dict:
          f"interleaved={chunked['interleaved_ticks']}|claim_ok={ok}")
     report["scenarios"]["chunked_tbt"] = trep
 
+    # ---- obs overhead (engine-side, gated ratio) -------------------------
+    t0 = time.perf_counter()
+    orep = measure_engine_obs_overhead(cfg, params, quick=quick)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    emit("engine_obs_overhead", wall_us,
+         f"ratio={orep['engine_obs_overhead_ratio']:.4f}|"
+         f"identical={orep['tokens_identical']}|"
+         f"events={orep['trace_events']}|claim_ok={orep['claim_ok']}")
+    report["scenarios"]["engine_obs_overhead"] = orep
+
+    # ---- cost-model + predictor calibration ------------------------------
+    t0 = time.perf_counter()
+    crep = calibration_section(cfg, params, quick=quick,
+                               calib_json=calib_json,
+                               trace_path=trace_path)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    emit("engine_calibration", wall_us, "|".join(
+        [f"{op}_p50={v}" for op, v in sorted(crep["residual_p50"].items())]
+        + [f"ece={crep['predictor_ece']}", f"claim_ok={crep['claim_ok']}"]))
+    report["scenarios"]["calibration"] = crep
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
@@ -126,5 +295,11 @@ if __name__ == "__main__":
                     help="CI-sized run (crash canary + artifact)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results JSON (e.g. BENCH_engine.json)")
+    ap.add_argument("--calib-json", default=None, metavar="PATH",
+                    help="write the calibration payload "
+                         "(e.g. BENCH_calib.json)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable engine trace sample")
     args = ap.parse_args()
-    main(quick=args.quick, json_path=args.json)
+    main(quick=args.quick, json_path=args.json,
+         calib_json=args.calib_json, trace_path=args.trace)

@@ -58,6 +58,12 @@ class HealthMonitor:
         # routing avoids fetching prefixes into nearly-exhausted pools.
         self.kv_ewma: dict[int, float] = {}
         self.kv_peak: dict[int, float] = {}
+        # Real-engine heartbeats (``ServingEngine.heartbeat()`` beacons):
+        # last-seen clock + last full beacon per engine_id.  Engines fold
+        # into the same kv_ewma/kv_peak maps as DES replicas so routing
+        # and reporting read one occupancy view across backends.
+        self.engine_seen: dict[int, float] = {}
+        self.engine_beacon: dict[int, dict] = {}
 
     def due(self, now: float) -> bool:
         """Whether a check interval elapsed since the last health round."""
@@ -129,6 +135,33 @@ class HealthMonitor:
             if rid not in live:
                 self.kv_ewma.pop(rid, None)
         return self.kv_ewma
+
+    def observe_engine_heartbeat(self, hb: dict,
+                                 now: float | None = None) -> None:
+        """Fold one real-engine heartbeat (``ServingEngine.heartbeat()``)
+        into the monitor: records liveness (``engine_alive``) and folds the
+        beacon's KV occupancy into the same ``kv_ewma``/``kv_peak`` maps
+        the DES replicas use, under the engine's ``engine_id`` — one
+        occupancy view across both backends.  ``now`` defaults to the
+        beacon's own clock (engines report monotonic seconds since
+        construction)."""
+        eid = int(hb["engine_id"])
+        t = float(hb["t"] if now is None else now)
+        self.engine_seen[eid] = t
+        self.engine_beacon[eid] = hb
+        occ = float(hb.get("kv_occupancy", 0.0))
+        a = self.cfg.kv_alpha
+        prev = self.kv_ewma.get(eid)
+        self.kv_ewma[eid] = occ if prev is None else (1 - a) * prev + a * occ
+        self.kv_peak[eid] = max(self.kv_peak.get(eid, 0.0), occ)
+
+    def engine_alive(self, engine_id: int, now: float) -> bool:
+        """Heartbeat-timeout liveness for a real engine: True iff a beacon
+        arrived within ``heartbeat_timeout`` of ``now`` (unknown engines
+        are dead — they never reported)."""
+        seen = self.engine_seen.get(engine_id)
+        return (seen is not None
+                and now - seen <= self.cfg.heartbeat_timeout)
 
     def kv_stats(self) -> dict:
         """Smoothed + peak per-replica KV occupancy (for result reporting)."""

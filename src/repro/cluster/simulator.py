@@ -125,9 +125,9 @@ class ClusterSimResult:
         histogram code path (identical bucketing and bounds)."""
         if self.slo:
             return self.slo
-        from ..obs.slo import slo_from_requests
-        return slo_from_requests(self.finished,
-                                 classify or classify_by_length)
+        from ..obs.slo import slo_or_fallback
+        return slo_or_fallback(None, self.finished,
+                               classify or classify_by_length)
 
     def ttft_by_class(self, classify=None) -> dict:
         """Per-SLO-class TTFT stats (mean/p95/n) over finished requests."""

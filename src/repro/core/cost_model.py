@@ -19,7 +19,7 @@ assigned architecture families (DESIGN.md §4).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 # TPU v5e hardware constants (assignment-specified).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
@@ -134,6 +134,14 @@ class CostModel:
                    self.n_chips * HBM_BW * self.hbm_eff)
         return max(comp, mem)
 
+    def attach_copy_time(self, tokens: float) -> float:
+        """Seconds to copy ``tokens`` of cached prefix KV into a slot's
+        cache span (the engine-side radix attach).  Pure memory traffic:
+        the block rows are read from the host store and written into the
+        slot — no compute term."""
+        return (2.0 * self.model.kv_bytes_per_token * tokens
+                / (self.n_chips * HBM_BW * self.hbm_eff))
+
     def decode_step_time(self, batch_size: int, total_kv_tokens: int) -> float:
         """One decode step: generate 1 token for each of ``batch_size`` seqs
         holding ``total_kv_tokens`` of KV cache in aggregate.  Decode is
@@ -149,6 +157,58 @@ class CostModel:
         mem = (m.n_params_active * m.dtype_bytes + kv_traffic) / (
             self.n_chips * HBM_BW * self.hbm_eff)
         return max(comp, mem)
+
+
+@dataclass
+class CalibratedCostModel(CostModel):
+    """Roofline model with per-op-class affine corrections layered on top.
+
+    ``correction`` is the plain-dict export of
+    ``repro.obs.calibration.CostCalibrator.correction()``:
+    ``{op_class: {"scale": s, "offset": o, ...}}`` mapping a raw roofline
+    prediction ``x`` seconds to ``max(s*x + o, 1e-12)``.  Op classes the
+    calibrator never converged on pass through uncorrected, so a partial
+    fit degrades gracefully to the analytic model.  The class keys are the
+    calibration plane's taxonomy — ``prefill_chunk`` (all prefill-shaped
+    work), ``decode_step``, ``attach_copy`` — kept as string literals here
+    so core stays import-free of repro.obs (obs is a leaf; core must not
+    close a cycle through it).
+    """
+
+    correction: dict = field(default_factory=dict)
+
+    def _apply(self, op_class: str, seconds: float) -> float:
+        c = self.correction.get(op_class)
+        if c is None:
+            return seconds
+        return max(c["scale"] * seconds + c["offset"], 1e-12)
+
+    def c_prefill(self, b: float) -> float:
+        return self._apply("prefill_chunk", super().c_prefill(b))
+
+    def prefill_cost(self, b: float, cached: float = 0.0) -> float:
+        return self._apply("prefill_chunk", super().prefill_cost(b, cached))
+
+    def prefill_step_time(self, batch_tokens: int, mean_ctx: float) -> float:
+        return self._apply("prefill_chunk",
+                           super().prefill_step_time(batch_tokens, mean_ctx))
+
+    def attach_copy_time(self, tokens: float) -> float:
+        return self._apply("attach_copy", super().attach_copy_time(tokens))
+
+    def decode_step_time(self, batch_size: int,
+                         total_kv_tokens: int) -> float:
+        return self._apply("decode_step",
+                           super().decode_step_time(batch_size,
+                                                    total_kv_tokens))
+
+    @classmethod
+    def from_fit(cls, base: CostModel,
+                 correction: dict) -> "CalibratedCostModel":
+        """Wrap an existing analytic model with a calibrator's fitted
+        correction (``CostCalibrator.correction()`` output)."""
+        return cls(model=base.model, n_chips=base.n_chips, mfu=base.mfu,
+                   hbm_eff=base.hbm_eff, correction=dict(correction))
 
 
 def make_cost_fn(cost_model: CostModel):

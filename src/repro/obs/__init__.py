@@ -19,18 +19,22 @@ from __future__ import annotations
 
 from typing import Callable, Optional
 
+from .calibration import (ATTACH_COPY, DECODE_STEP, OP_CLASSES,
+                          PREFILL_CHUNK, CostCalibrator, PredictorCalibration)
 from .metrics import (DEFAULT_SPEC, HistogramSpec, LogHistogram,
                       MetricsRegistry)
 from .slo import (E2E_HIST, TBT_HIST, TTFT_HIST, burn_view, classify_request,
-                  record_finish, slo_from_requests, slo_report,
-                  ttft_percentile)
+                  record_finish, slo_from_requests, slo_or_fallback,
+                  slo_report, ttft_percentile)
 from .trace import FlightDump, TraceEvent, TraceRecorder
 
 __all__ = [
     "Observability", "TraceRecorder", "TraceEvent", "FlightDump",
     "MetricsRegistry", "LogHistogram", "HistogramSpec", "DEFAULT_SPEC",
-    "slo_report", "slo_from_requests", "record_finish", "burn_view",
-    "classify_request", "ttft_percentile",
+    "CostCalibrator", "PredictorCalibration", "OP_CLASSES",
+    "PREFILL_CHUNK", "DECODE_STEP", "ATTACH_COPY",
+    "slo_report", "slo_from_requests", "slo_or_fallback", "record_finish",
+    "burn_view", "classify_request", "ttft_percentile",
 ]
 
 
@@ -44,24 +48,39 @@ class Observability:
     classifier so labels agree with admission decisions.
     """
 
-    __slots__ = ("trace", "metrics", "classify", "_finish_h")
+    __slots__ = ("trace", "metrics", "classify", "calib", "pred_calib",
+                 "_finish_h")
 
     def __init__(self, trace: Optional[TraceRecorder] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 classify: Optional[Callable] = None):
+                 classify: Optional[Callable] = None,
+                 calib: Optional[CostCalibrator] = None,
+                 pred_calib: Optional[PredictorCalibration] = None):
         self.trace = trace
         self.metrics = metrics
         self.classify = classify or classify_request
+        # Calibration plane (obs/calibration.py): cost-model residual fits
+        # fed by the engine's step timings, and the predicted-vs-actual
+        # length view fed from finished requests (see ``finish``).  Both
+        # default off — pure-recording consumers pay nothing.
+        self.calib = calib
+        self.pred_calib = pred_calib
         # per-SLO-class pre-bound (ttft, e2e, tbt, terminal) handles for
         # the finish hot path (labels resolved once per class)
         self._finish_h: dict = {}
 
     @classmethod
     def enabled(cls, trace_capacity: int = 65536,
-                classify: Optional[Callable] = None) -> "Observability":
-        """Everything on: tracer ring + metrics registry."""
+                classify: Optional[Callable] = None,
+                calibration: bool = False) -> "Observability":
+        """Everything on: tracer ring + metrics registry; pass
+        ``calibration=True`` to also attach the cost/predictor
+        calibrators (engine-backed runs)."""
         return cls(trace=TraceRecorder(capacity=trace_capacity),
-                   metrics=MetricsRegistry(), classify=classify)
+                   metrics=MetricsRegistry(), classify=classify,
+                   calib=CostCalibrator() if calibration else None,
+                   pred_calib=(PredictorCalibration() if calibration
+                               else None))
 
     def slo_class(self, req) -> str:
         """Classify ``req``, caching the label on the request itself
@@ -105,6 +124,13 @@ class Observability:
         if self.metrics is not None:
             self.metrics.record_timeline(name, t, v, labels)
 
+    def calibrate(self, op_class: str, predicted: float,
+                  measured: float) -> None:
+        """Feed one (predicted, measured) seconds pair to the cost
+        calibrator (no-op when no calibrator is attached)."""
+        if self.calib is not None:
+            self.calib.observe(op_class, predicted, measured)
+
     def finish(self, req, t: float, replica_id: int = -1) -> None:
         """Record a request finishing: trace instant, latency histograms,
         and the unified terminal-state counter.  Equivalent to
@@ -112,6 +138,8 @@ class Observability:
         per-class pre-bound handles (this is the hottest metrics site)."""
         if self.trace is not None:
             self.trace.emit("finish", t, req.request_id, replica_id)
+        if self.pred_calib is not None:
+            self.pred_calib.observe(req)
         m = self.metrics
         if m is not None:
             cls = getattr(req, "slo_class", None)
@@ -155,4 +183,8 @@ class Observability:
             out["burn"] = burn_view(self.metrics)
         if self.trace is not None:
             out["trace"] = self.trace.stats()
+        if self.calib is not None:
+            out["calibration"] = self.calib.snapshot()
+        if self.pred_calib is not None:
+            out["predictor_calibration"] = self.pred_calib.snapshot()
         return out

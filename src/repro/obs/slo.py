@@ -114,6 +114,20 @@ def slo_from_requests(requests: Iterable,
     return slo_report(reg, pcts)
 
 
+def slo_or_fallback(metrics: Optional[MetricsRegistry], finished: Iterable,
+                    classify: Optional[Callable] = None,
+                    pcts: Iterable[float] = (50, 95, 99)) -> dict:
+    """One per-class-percentile code path for *both* backends: read the
+    live registry when the run recorded one, otherwise rebuild the exact
+    same report from the finished requests (:func:`slo_from_requests` —
+    identical histograms, identical bounds).  ``ClusterSimResult`` (DES)
+    and ``ServingEngine`` (real engine) both route through this, so bench
+    tables never mix percentile implementations across backends."""
+    if metrics is not None:
+        return slo_report(metrics, pcts)
+    return slo_from_requests(finished, classify, pcts)
+
+
 def ttft_percentile(report: dict, cls: str, p: int = 95) -> Optional[float]:
     """Convenience: one TTFT percentile out of an :func:`slo_report` dict
     (None when the class has no finished requests)."""

@@ -39,12 +39,24 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 # Stage ordering for per-request breakdowns (postmortem + trace_summary):
-# the wait/prefill/decode boundaries of a request's life.
+# the wait/prefill/decode boundaries of a request's life.  ``park`` /
+# ``promote`` are the real engine's slot-lifecycle instants (slot parked at
+# the scratch position for chunked prefill; slot promoted to decode).
 LIFECYCLE_KINDS = (
     "arrival", "admit", "defer", "shed", "budget_deny", "route", "enqueue",
     "dispatch", "deadline_drop", "prefix_fetch", "handoff", "first_token",
-    "preempt", "evict", "finish",
+    "park", "promote", "preempt", "evict", "finish",
 )
+
+# Span (phase X) stage taxonomy shared by the DES and the real engine:
+# ``prefill`` / ``decode`` are the DES's batch spans; the engine adds
+# ``chunk`` (one chunked-prefill step), ``recompute`` (a chunk re-running a
+# preempted request's prompt), and ``attach`` (radix prefix-KV copy into a
+# slot).  tools/trace_summary.py groups spans by this map.
+SPAN_STAGES = {
+    "prefill": "prefill", "chunk": "prefill", "recompute": "prefill",
+    "attach": "attach", "decode": "decode",
+}
 
 
 @dataclass(slots=True)
@@ -184,7 +196,11 @@ class TraceRecorder:
             if dur > 0.0:
                 ev["ph"] = "X"
                 ev["dur"] = dur * 1e6
-                ev["tid"] = 0                     # engine track
+                # Engine spans carrying a slot land on per-slot tracks so
+                # Perfetto shows one lane per slot; batch-level DES spans
+                # (no slot) share the replica's track 0.
+                ev["tid"] = (data.get("slot", 0)
+                             if isinstance(data, dict) else 0)
                 ev["cat"] = "engine"
             else:
                 ev["ph"] = "i"

@@ -52,6 +52,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.batch_builder import BatchBudget
+from ..core.cost_model import CostModel
 from ..core.scheduler import BaseScheduler
 from ..core.types import Request, RequestState, TerminalState
 
@@ -90,6 +91,10 @@ class EngineConfig:
     chunk_prefill_tokens: Optional[int] = None  # per-tick chunk budget; None=off
     enable_prefix_cache: bool = False           # engine-side radix KV reuse
     prefix_cache_blocks: Optional[int] = None   # radix pool-share cap (None=all)
+    # Fleet identity: the pid lane this engine's trace events land on (and
+    # the key heartbeats carry).  Default 0 matches the single-engine trace
+    # layout that predates multi-engine observability.
+    engine_id: int = 0
 
 
 @dataclass
@@ -127,7 +132,7 @@ class ServingEngine:
                  policy: DtypePolicy | None = None,
                  admission=None, policy_store=None,
                  replica_key: Optional[int] = None,
-                 obs=None):
+                 obs=None, cost_model: Optional[CostModel] = None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -157,7 +162,7 @@ class ServingEngine:
             self.radix = RadixPrefixIndex(
                 self.pool, self.e.block_size,
                 capacity_blocks=self.e.prefix_cache_blocks)
-            self.radix.on_evict = lambda nid: self._node_kv.pop(nid, None)
+            self.radix.on_evict = self._on_radix_evict
         self._prefilling: dict[int, _PrefillState] = {}  # admission order
         self._chunk_jits: dict = {}
         self.chunks_run = 0
@@ -183,6 +188,16 @@ class ServingEngine:
         # contract as the cluster simulator: every emission is guarded, so
         # obs=None costs one attribute check per site.
         self.obs = obs
+        # Cost-calibration plane: the analytic roofline whose predictions
+        # the attached CostCalibrator (obs.calib) scores against measured
+        # step walls.  Auto-created when the obs bundle carries a
+        # calibrator so ``Observability.enabled(calibration=True)`` needs
+        # no extra wiring; without a calibrator the engine stays free of
+        # any cost-model coupling.
+        if cost_model is None and obs is not None and \
+                getattr(obs, "calib", None) is not None:
+            cost_model = CostModel()
+        self.cost = cost_model
         if obs is not None and admission is not None:
             admission.obs = obs
             if hasattr(admission, "_classify"):
@@ -200,7 +215,9 @@ class ServingEngine:
         self.readmitted = 0
         self._prefill_tok_rate = 0.0     # EWMA tokens/s, for delay estimates
         self.finished: list[Request] = []
+        self.tokens_out = 0              # every sampled token (heartbeats)
         self.preemptions = 0
+        self._decode_compiled = False    # first decode tick includes JIT
         self.prefill_batches = 0
         self.padded_tokens = 0
         self.real_tokens = 0
@@ -367,6 +384,13 @@ class ServingEngine:
         blocks = self.radix.match(req.prompt_hashes, touch=False).blocks
         req.cached_len = min(blocks * self.e.block_size,
                              int(req.prompt_len) - 1)
+        if self.obs is not None:
+            self.obs.event("probe", self.now(), request_id=req.request_id,
+                           replica_id=self.e.engine_id,
+                           data={"blocks": blocks,
+                                 "cached_est": int(req.cached_len)})
+            self.obs.inc("radix_probe_total",
+                         {"hit": "true" if blocks else "false"})
 
     def add_request(self, req: Request) -> None:
         """Ingress one request: stamp its prefix estimate (chunked/prefix
@@ -377,7 +401,8 @@ class ServingEngine:
         if self._chunked:
             self._stamp_prefix(req)
         if self.obs is not None:
-            self.obs.event("arrival", now, request_id=req.request_id)
+            self.obs.event("arrival", now, request_id=req.request_id,
+                           replica_id=self.e.engine_id)
             self.obs.inc("requests_arrived_total",
                          {"slo_class": self.obs.classify(req)})
         if self.admission is not None:
@@ -395,7 +420,8 @@ class ServingEngine:
                 return
         self.sched.submit(req, now=now)
         if self.obs is not None:
-            self.obs.event("enqueue", now, request_id=req.request_id)
+            self.obs.event("enqueue", now, request_id=req.request_id,
+                           replica_id=self.e.engine_id)
 
     def _pump_retries(self, now: float) -> None:
         if self.admission is None or not self.admission.retry_pending():
@@ -504,8 +530,21 @@ class ServingEngine:
                                       0.7 * self._prefill_tok_rate + 0.3 * rate)
         if self.obs is not None:
             self.obs.event("prefill", t_pf0, dur=max(t_first - t_pf0, 0.0),
+                           replica_id=self.e.engine_id,
                            data={"batch": n, "bucket": bucket,
                                  "tokens": int(lens.sum())})
+            self.obs.inc("engine_compile_cache_total",
+                         {"kind": "prefill",
+                          "hit": "false" if fresh_jit else "true"})
+            # Calibration sample: batch prefill is prefill-shaped work.
+            # First-call-per-shape walls include XLA compilation and would
+            # poison the fit the same way they would the rate EWMA — skip.
+            if self.cost is not None and not fresh_jit:
+                self.obs.calibrate(
+                    "prefill_chunk",
+                    self.cost.prefill_step_time(int(lens.sum()),
+                                                float(lens.mean())),
+                    max(t_first - t_pf0, 1e-9))
         for i, r in enumerate(reqs):
             self.pool.allocate(r.request_id, r.prompt_len)
             slot = self.slots.acquire(r.request_id)
@@ -518,12 +557,15 @@ class ServingEngine:
             if self.obs is not None:
                 wait = max(0.0, t_pf0 - r.arrival_time)
                 self.obs.event("dispatch", t_pf0, request_id=r.request_id,
+                               replica_id=self.e.engine_id,
                                data={"wait": round(wait, 6)})
                 self.obs.observe("sched_dispatch_wait_seconds", wait,
                                  {"slo_class": self.obs.classify(r)})
                 self.obs.event("first_token", t_first,
-                               request_id=r.request_id)
+                               request_id=r.request_id,
+                               replica_id=self.e.engine_id)
             r.generated = 1
+            self.tokens_out += 1
             self.output_tokens[r.request_id] = [int(first[i, 0])]
             self.slot_pos[slot] = r.prompt_len
             self.last_tokens[slot, 0] = first[i, 0]
@@ -546,6 +588,16 @@ class ServingEngine:
         self._map_into_caches(prefill_caches, flat, stacked)
 
     # ---- chunked admission + prefill (convergence mode) -------------------
+
+    def _on_radix_evict(self, node_id: int) -> None:
+        """Radix eviction hook: drop the node's host-side KV block and
+        record the eviction (capacity-pressure telemetry)."""
+        self._node_kv.pop(node_id, None)
+        if self.obs is not None:
+            self.obs.event("evict", self.now(),
+                           replica_id=self.e.engine_id,
+                           data={"node": node_id})
+            self.obs.inc("radix_evict_total")
 
     def _attach_prefix(self, r: Request, slot: int, now: float
                        ) -> tuple[int, int, object]:
@@ -580,11 +632,30 @@ class ServingEngine:
         pin_node, _ = self.radix.insert(hashes[:full_blocks], now)
         self.radix.pin(pin_node)
         resident = pin_node.depth if pin_node is not None else 0
+        t_a0 = self.now() if self.obs is not None else 0.0
         for i in range(usable):
             self._write_block(slot, i, self._node_kv[path[i].node_id])
         cached_tokens = usable * bs
         r.cached_len = cached_tokens
         self.prefix_saved_tokens += cached_tokens
+        if self.obs is not None:
+            self.obs.inc("radix_insert_total")
+            if usable:
+                t_a1 = self.now()
+                copied = sum(a.nbytes for a in jax.tree.leaves(
+                    self._node_kv[path[0].node_id])) * usable
+                self.obs.event("attach", t_a0, request_id=r.request_id,
+                               replica_id=self.e.engine_id,
+                               dur=max(t_a1 - t_a0, 0.0),
+                               data={"slot": slot, "blocks": usable,
+                                     "tokens": cached_tokens,
+                                     "bytes": int(copied)})
+                self.obs.observe("radix_attach_copy_bytes", float(copied))
+                if self.cost is not None:
+                    self.obs.calibrate(
+                        "attach_copy",
+                        self.cost.attach_copy_time(cached_tokens),
+                        max(t_a1 - t_a0, 1e-9))
         return cached_tokens, resident, pin_node
 
     def _admit_chunked(self, reqs: list, now: float) -> None:
@@ -622,8 +693,13 @@ class ServingEngine:
             if self.obs is not None:
                 wait = max(0.0, now - r.arrival_time)
                 self.obs.event("dispatch", now, request_id=r.request_id,
+                               replica_id=self.e.engine_id,
                                data={"wait": round(wait, 6),
                                      "cached_tokens": cached})
+                self.obs.event("park", now, request_id=r.request_id,
+                               replica_id=self.e.engine_id,
+                               data={"slot": slot,
+                                     "cap_tokens": cap})
                 self.obs.observe("sched_dispatch_wait_seconds", wait,
                                  {"slo_class": self.obs.classify(r)})
 
@@ -643,6 +719,7 @@ class ServingEngine:
                 break
             st = self._prefilling[slot]
             r = st.req
+            pos0 = st.pos
             width = min(int(r.prompt_len) - st.pos, left)
             left -= width
             toks = np.asarray(r.prompt_tokens[st.pos:st.pos + width],
@@ -665,10 +742,30 @@ class ServingEngine:
                     rate if self._prefill_tok_rate <= 0 else
                     0.7 * self._prefill_tok_rate + 0.3 * rate)
             if self.obs is not None:
-                self.obs.event("prefill", t0, dur=max(t1 - t0, 0.0),
-                               data={"batch": 1, "suffix_tokens": width,
+                # A chunk re-running a preempted request's prompt is the
+                # DES's "recompute" stage; first-pass chunks are "chunk".
+                # Both group under "prefill" via trace.SPAN_STAGES.
+                kind = "recompute" if r.preemptions > 0 else "chunk"
+                self.obs.event(kind, t0, request_id=r.request_id,
+                               replica_id=self.e.engine_id,
+                               dur=max(t1 - t0, 0.0),
+                               data={"slot": slot, "batch": 1,
+                                     "suffix_tokens": width,
                                      "cached_tokens": int(r.cached_len),
-                                     "chunk": width})
+                                     "chunk": width, "pos": pos0})
+                self.obs.observe("engine_chunk_width_tokens", float(width))
+                self.obs.inc("engine_compile_cache_total",
+                             {"kind": "chunk",
+                              "hit": "false" if fresh_jit else "true"})
+                # Calibration sample: roofline prediction for prefilling a
+                # prompt to pos0+width with pos0 tokens already resident —
+                # exactly this chunk's suffix work.  Fresh-JIT walls
+                # include compilation and are skipped.
+                if self.cost is not None and not fresh_jit:
+                    self.obs.calibrate(
+                        "prefill_chunk",
+                        self.cost.prefill_cost(pos0 + width, cached=pos0),
+                        max(t1 - t0, 1e-9))
             if st.pos >= int(r.prompt_len):
                 completed.append((slot, logits))
         for slot, logits in completed:
@@ -697,7 +794,13 @@ class ServingEngine:
         r.first_token_time = t
         r.generated = 1
         if self.obs is not None:
-            self.obs.event("first_token", t, request_id=r.request_id)
+            self.obs.event("promote", t, request_id=r.request_id,
+                           replica_id=self.e.engine_id,
+                           data={"slot": slot,
+                                 "prompt_len": int(r.prompt_len)})
+            self.obs.event("first_token", t, request_id=r.request_id,
+                           replica_id=self.e.engine_id)
+        self.tokens_out += 1
         self.output_tokens[r.request_id] = [int(first[0, 0])]
         self.slot_pos[slot] = int(r.prompt_len)
         self.last_tokens[slot, 0] = first[0, 0]
@@ -734,6 +837,11 @@ class ServingEngine:
             self.interleaved_ticks += 1
         t_tick0 = self.now()
         steps = 0
+        # Tick-start batch composition, for the decode calibration sample
+        # (the batch can shrink mid-tick as slots finish; the prediction
+        # uses the composition the tick started with).
+        batch0 = len(self.slot_state)
+        kv0 = int(sum(int(self.slot_pos[s]) for s in self.slot_state))
         for _ in range(self.e.decode_steps_per_tick):
             if not self.slot_state:
                 break
@@ -760,6 +868,7 @@ class ServingEngine:
             for slot, st in self.slot_state.items():
                 self.slot_pos[slot] += 1
                 self.last_tokens[slot, 0] = nxt[slot, 0]
+                self.tokens_out += 1
                 self.output_tokens.setdefault(
                     st.req.request_id, []).append(int(nxt[slot, 0]))
                 st.req.generated += 1
@@ -774,11 +883,28 @@ class ServingEngine:
         if self.obs is not None and steps:
             t_end = self.now()
             self.obs.event("decode", t_tick0, dur=max(t_end - t_tick0, 0.0),
-                           data={"batch": len(self.slot_state),
-                                 "steps": steps})
+                           replica_id=self.e.engine_id,
+                           data={"batch": batch0, "steps": steps})
             self.obs.gauge("kv_occupancy", v=self.pool.utilization)
+            self.obs.gauge("engine_slots_active",
+                           v=float(len(self.slot_state)))
+            self.obs.inc("engine_compile_cache_total",
+                         {"kind": "decode",
+                          "hit": "true" if self._decode_compiled
+                          else "false"})
+            # Per-step calibration sample against the tick-start batch.
+            # The first tick's wall includes decode_fn compilation — skip
+            # it, like every other fresh-JIT timing in this file.
+            if (self.cost is not None and self._decode_compiled
+                    and batch0 > 0):
+                self.obs.calibrate(
+                    "decode_step",
+                    self.cost.decode_step_time(batch0, kv0),
+                    max((t_end - t_tick0) / steps, 1e-9))
+        if steps:
+            self._decode_compiled = True
 
-    def _preempt_slot(self, slot: int) -> None:
+    def _preempt_slot(self, slot: int, cause: str = "kv_pressure") -> None:
         st = self.slot_state.pop(slot)
         self.pool.free(st.seq_id)
         if self.radix is not None and st.pin_node is not None:
@@ -795,8 +921,10 @@ class ServingEngine:
         self.sched.submit(req, now=self.now())
         if self.obs is not None:
             self.obs.event("preempt", self.now(),
-                           request_id=req.request_id)
-            self.obs.inc("preemptions_total", {"kind": "preempt"})
+                           request_id=req.request_id,
+                           replica_id=self.e.engine_id,
+                           data={"slot": slot, "cause": cause})
+            self.obs.inc("preemptions_total", {"kind": cause})
 
     def _finish_slot(self, slot: int) -> None:
         st = self.slot_state.pop(slot, None)
@@ -814,9 +942,42 @@ class ServingEngine:
         self.finished.append(req)
         self.sched.on_finish(req, req.finish_time)
         if self.obs is not None:
-            self.obs.finish(req, req.finish_time)
+            self.obs.finish(req, req.finish_time,
+                            replica_id=self.e.engine_id)
 
     # ---- stats ---------------------------------------------------------------
+
+    def slo_report(self, classify=None) -> dict:
+        """Per-class TTFT/TBT/E2E percentiles for this engine's finished
+        requests, through the one shared code path
+        (:func:`repro.obs.slo.slo_or_fallback`): the live registry when an
+        obs bundle is wired, an identical recomputation from
+        ``self.finished`` otherwise — the same contract as
+        ``ClusterSimResult.slo_report``, so engine- and DES-backed benches
+        never mix percentile implementations."""
+        from ..obs.slo import slo_or_fallback
+        metrics = self.obs.metrics if self.obs is not None else None
+        return slo_or_fallback(metrics, self.finished, classify)
+
+    def heartbeat(self) -> dict:
+        """Liveness + load beacon for fleet health monitoring
+        (``cluster.health.HealthMonitor.observe_engine_heartbeat``): engine
+        identity, clock, KV/slot occupancy, backlog, and progress counters.
+        When an obs bundle is wired the beacon reuses its metrics snapshot
+        so the health plane and the metrics plane can never disagree."""
+        hb = {
+            "engine_id": self.e.engine_id,
+            "t": self.now(),
+            "kv_occupancy": self.pool.utilization,
+            "slots_active": len(self.slot_state),
+            "prefilling": len(self._prefilling),
+            "waiting": self.sched.waiting(),
+            "finished": len(self.finished),
+            "tokens_out": self.tokens_out,
+        }
+        if self.obs is not None and self.obs.metrics is not None:
+            hb["metrics"] = self.obs.metrics.snapshot()
+        return hb
 
     def stats(self) -> dict:
         """Run summary: throughput, terminal accounting, padding waste,
@@ -834,7 +995,7 @@ class ServingEngine:
             "finished": len(self.finished),
             "shed": len(self.shed),
             "terminal": terminal,
-            "slo": (self.obs.slo_report() if self.obs is not None else {}),
+            "slo": self.slo_report(),
             "readmitted": self.readmitted,
             "admission": (self.admission.stats()
                           if self.admission is not None else {}),

@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Render a calibration payload (``BENCH_calib.json``) as tables.
+
+Stdlib-only CLI over the JSON that ``benchmarks/bench_engine_convergence
+--calib-json`` writes (or any ``Observability.snapshot()`` containing
+``calibration`` / ``predictor_calibration`` sections):
+
+    python tools/calib_report.py BENCH_calib.json
+    python tools/calib_report.py BENCH_calib.json --json
+
+Prints the per-op-class cost-model residual table (fitted scale/offset,
+post-fit residual p50/p90, drift state), the worst-drifting op classes,
+and the length predictor's calibration curve + ECE/coverage/bias.
+``--json`` emits the same derived view as machine-readable JSON on
+stdout instead (the "calibration curves as JSON" surface).  CI runs this
+as a smoke check over the quick-bench calibration artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def _sections(doc: dict) -> tuple[dict, dict]:
+    """(cost_calibration, predictor_calibration) snapshots out of either
+    payload shape: the bench artifact (``cost_calibration`` /
+    ``predictor_calibration``) or a bare obs snapshot (``calibration`` /
+    ``predictor_calibration``)."""
+    cost = doc.get("cost_calibration", doc.get("calibration", {}))
+    pred = doc.get("predictor_calibration", {})
+    return cost or {}, pred or {}
+
+
+def derive(doc: dict) -> dict:
+    """Machine-readable derived view: per-class residual rows, worst-drift
+    ranking, and the predictor curve — what ``--json`` prints."""
+    cost, pred = _sections(doc)
+    classes = cost.get("classes", {})
+    rows = []
+    drifts = []
+    for op in sorted(classes):
+        row = classes[op]
+        res = row.get("residual", {})
+        drift = row.get("drift", {})
+        rows.append({
+            "op_class": op,
+            "n": row.get("n", 0),
+            "scale": row.get("scale", 1.0),
+            "offset": row.get("offset", 0.0),
+            "residual_p50": res.get("p50"),
+            "residual_p90": res.get("p90"),
+            "drifting": drift.get("drifting", False),
+        })
+        ratio = drift.get("drift_ratio")
+        if ratio and ratio > 0:
+            drifts.append({"op_class": op, "drift_ratio": ratio,
+                           "abs_log_drift": abs(math.log(ratio))})
+    drifts.sort(key=lambda d: d["abs_log_drift"], reverse=True)
+    return {
+        "classes": rows,
+        "worst_drift": drifts,
+        "correction": cost.get("correction", {}),
+        "dropped": cost.get("dropped", 0),
+        "predictor": {
+            "observed": pred.get("observed", 0),
+            "abstained": pred.get("abstained", 0),
+            "ece": pred.get("ece"),
+            "coverage": pred.get("coverage"),
+            "bias": pred.get("bias"),
+            "curve": pred.get("curve", []),
+            "worst_keys": pred.get("worst_keys", []),
+        },
+    }
+
+
+def render(view: dict) -> None:
+    rows = view["classes"]
+    if rows:
+        print("cost-model calibration (per op class):")
+        print(f"  {'op_class':14s} {'n':>6s} {'scale':>8s} {'offset':>11s} "
+              f"{'res_p50':>8s} {'res_p90':>8s} {'drift':>6s}")
+        for r in rows:
+            p50 = f"{r['residual_p50']:.3f}" if r["residual_p50"] else "-"
+            p90 = f"{r['residual_p90']:.3f}" if r["residual_p90"] else "-"
+            print(f"  {r['op_class']:14s} {r['n']:6d} {r['scale']:8.3f} "
+                  f"{r['offset']:11.6f} {p50:>8s} {p90:>8s} "
+                  f"{'DRIFT' if r['drifting'] else 'ok':>6s}")
+    else:
+        print("cost-model calibration: no samples")
+    if view["worst_drift"]:
+        print("\nworst drift (|log recent/global scale|, descending):")
+        for d in view["worst_drift"]:
+            print(f"  {d['op_class']:14s} drift_ratio="
+                  f"{d['drift_ratio']:.3f}")
+    p = view["predictor"]
+    print(f"\nlength predictor: observed={p['observed']} "
+          f"abstained={p['abstained']}")
+    if p["observed"]:
+        print(f"  ece={p['ece']:.4f} coverage={p['coverage']:.3f} "
+              f"bias={p['bias']:+.4f}")
+        if p["curve"]:
+            print(f"  {'pred bin':>16s} {'n':>5s} {'mean_pred':>10s} "
+                  f"{'mean_actual':>12s}")
+            for b in p["curve"]:
+                print(f"  [{b['lo']:6.0f},{b['hi']:6.0f}) {b['n']:5d} "
+                      f"{b['mean_predicted']:10.2f} "
+                      f"{b['mean_actual']:12.2f}")
+        for k in p["worst_keys"]:
+            print(f"  worst key {k['key']}: n={k['n']} "
+                  f"bias={k['bias']:+.4f} coverage={k['coverage']:.3f}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("payload", help="BENCH_calib.json (or an obs snapshot "
+                                    "with a 'calibration' section)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the derived view as JSON instead of tables")
+    args = ap.parse_args(argv)
+    with open(args.payload) as f:
+        doc = json.load(f)
+    view = derive(doc)
+    if not view["classes"] and not view["predictor"]["observed"]:
+        print(f"{args.payload}: no calibration sections found",
+              file=sys.stderr)
+        return 1
+    if args.json:
+        json.dump(view, sys.stdout, indent=2, sort_keys=True)
+        print()
+    else:
+        render(view)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

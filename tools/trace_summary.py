@@ -8,11 +8,16 @@ Stdlib-only CLI over the Perfetto-loadable trace that
     python tools/trace_summary.py trace_sample.json
     python tools/trace_summary.py trace_sample.json --top 5
     python tools/trace_summary.py trace_sample.json --request 42
+    python tools/trace_summary.py trace_sample.json --slot 2
 
 Reports the top-N slowest requests (arrival → finish) with their
 wait / prefill / decode stage split, the per-stage aggregate breakdown,
-and per-replica engine occupancy from the prefill/decode spans.  CI runs
-this as a smoke check over the quick-bench trace artifact.
+and per-replica engine occupancy from the spans — both per span name and
+grouped by stage (the engine's ``chunk`` / ``recompute`` spans are
+prefill-stage work, ``attach`` is the radix prefix-KV copy).  ``--slot``
+prints one engine slot's lifecycle (every span and instant carrying that
+slot), mirroring ``--request``.  CI runs this as a smoke check over the
+quick-bench trace artifacts.
 """
 
 from __future__ import annotations
@@ -21,6 +26,14 @@ import argparse
 import json
 import sys
 from collections import defaultdict
+
+# Span-name -> stage grouping; mirrors repro.obs.trace.SPAN_STAGES (this
+# tool stays stdlib-only, so the map is duplicated rather than imported —
+# keep the two in sync).  Unknown span names group under "other".
+SPAN_STAGES = {
+    "prefill": "prefill", "chunk": "prefill", "recompute": "prefill",
+    "attach": "attach", "decode": "decode",
+}
 
 
 def load_events(path: str) -> list[dict]:
@@ -73,14 +86,59 @@ def engine_occupancy(events: list[dict]) -> dict[int, dict[str, float]]:
     return {pid: dict(spans) for pid, spans in out.items()}
 
 
+def stage_occupancy(events: list[dict]) -> dict[int, dict[str, float]]:
+    """replica pid -> {stage: busy seconds}: spans folded through
+    SPAN_STAGES so the engine's chunk/recompute/attach names land in the
+    same stage taxonomy the DES reports."""
+    out: dict[int, dict[str, float]] = defaultdict(lambda: defaultdict(float))
+    for e in events:
+        if e.get("ph") == "X":
+            stage = SPAN_STAGES.get(e["name"], "other")
+            out[e.get("pid", 0)][stage] += e.get("dur", 0.0) / 1e6
+    return {pid: dict(stages) for pid, stages in out.items()}
+
+
+def slot_events(events: list[dict], slot: int) -> list[dict]:
+    """Every span/instant carrying ``args.slot == slot``, time-ordered —
+    one engine slot's lifecycle (park → attach → chunk* → promote →
+    preempt/finish cycles)."""
+    out = [e for e in events
+           if e.get("args", {}).get("slot") == slot]
+    out.sort(key=lambda e: e.get("ts", 0.0))
+    return out
+
+
 def summarize(path: str, top: int = 10,
-              request: int | None = None) -> int:
+              request: int | None = None,
+              slot: int | None = None) -> int:
     events = load_events(path)
     if not events:
         print(f"{path}: no trace events", file=sys.stderr)
         return 1
     lives = lifecycles(events)
     splits = {rid: stage_split(ev) for rid, ev in lives.items()}
+
+    if slot is not None:
+        evs = slot_events(events, slot)
+        if not evs:
+            print(f"slot {slot}: no events in trace window", file=sys.stderr)
+            return 1
+        print(f"slot {slot}: {len(evs)} events")
+        for e in evs:
+            t = e.get("ts", 0.0) / 1e6
+            dur = e.get("dur", 0.0) / 1e6 if e.get("ph") == "X" else 0.0
+            rid = e.get("args", {}).get("request_id", "-")
+            tail = f" dur={dur:.4f}s" if dur else ""
+            print(f"  t={t:9.4f}s  {e['name']:10s} request={rid}{tail}")
+        busy = defaultdict(float)
+        for e in evs:
+            if e.get("ph") == "X":
+                busy[SPAN_STAGES.get(e["name"], "other")] += \
+                    e.get("dur", 0.0) / 1e6
+        if busy:
+            print("  busy: " + " ".join(f"{k}={v:.4f}s" for k, v in
+                                        sorted(busy.items())))
+        return 0
 
     if request is not None:
         ev = lives.get(request)
@@ -125,6 +183,12 @@ def summarize(path: str, top: int = 10,
             spans = " ".join(f"{k}={v:.3f}s" for k, v in
                              sorted(occ[pid].items()))
             print(f"  replica {pid}: {spans}")
+        st_occ = stage_occupancy(events)
+        print("\nper-replica engine busy time (stages):")
+        for pid in sorted(st_occ):
+            stages = " ".join(f"{k}={v:.3f}s" for k, v in
+                              sorted(st_occ[pid].items()))
+            print(f"  replica {pid}: {stages}")
     return 0
 
 
@@ -136,8 +200,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="how many slowest requests to list (default 10)")
     ap.add_argument("--request", type=int, default=None,
                     help="print one request's full lifecycle instead")
+    ap.add_argument("--slot", type=int, default=None,
+                    help="print one engine slot's lifecycle instead")
     args = ap.parse_args(argv)
-    return summarize(args.trace, top=args.top, request=args.request)
+    return summarize(args.trace, top=args.top, request=args.request,
+                     slot=args.slot)
 
 
 if __name__ == "__main__":
