@@ -1,0 +1,161 @@
+"""Live engine-fleet benchmark (beyond-paper): prefix-aware vs
+prefix-blind routing over two real engines on a shared-prefix workload.
+
+One burst of shared-prefix requests (a common 128-token system prompt +
+short per-request suffixes) plus a few long non-shared interferers is
+served twice through :class:`~repro.cluster.engine_fleet.EngineFleet` at
+matched budgets:
+
+* **prefix-aware** — engines run their radix KV caches, advertise into a
+  fleet :class:`PrefixDirectory`, and the ``EWSJFRouter`` steers
+  shared-prefix arrivals toward holders (executing real host-KV handoffs
+  over the shared :class:`LinkTopology` when a remote holder is deeper);
+* **prefix-blind** — same engines, same router, caches and directory off:
+  every prefill runs the full prompt.
+
+Reported: short-request TTFT p50/p95, prefill tokens actually skipped,
+handoff counts/bytes, and the headline claim bit
+``prefix_aware_not_worse`` (aware short-TTFT p95 ≤ blind p95 + 5%
+tolerance).  **Report-only**: real-engine wall clock on a shared CI box is
+noisy, so ``BENCH_fleet.json`` is uploaded as an artifact but NOT wired
+into check_regression.py's gate loop.
+
+CLI: ``python -m benchmarks.bench_engine_fleet [--quick] [--json PATH]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.cluster import (EngineFleet, EWSJFRouter, HealthConfig,
+                           HealthMonitor)
+from repro.configs import get_smoke_config
+from repro.core import FCFSScheduler, Request
+from repro.kvplane import (LinkTopology, PrefixDirectory,
+                           PrefixDirectoryConfig)
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+
+from .common import cost_model, emit
+
+ARCH = "llama2-13b"
+SHARED_LEN = 128                 # system-prompt tokens shared by every
+                                 # short request (8 full 16-token blocks)
+
+
+def _workload(cfg, n_shared: int, n_long: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=(SHARED_LEN,)) \
+                .astype(np.int32)
+    reqs = []
+    for i in range(n_shared):
+        sfx = int(rng.integers(16, 64))
+        toks = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size,
+                                  size=(sfx,)).astype(np.int32)])
+        reqs.append(Request(request_id=i, arrival_time=0.0,
+                            prompt_len=len(toks), max_new_tokens=6,
+                            prompt_tokens=toks))
+    for j in range(n_long):
+        pl = int(rng.integers(200, 260))
+        reqs.append(Request(
+            request_id=1000 + j, arrival_time=0.0, prompt_len=pl,
+            max_new_tokens=6,
+            prompt_tokens=rng.integers(0, cfg.vocab_size,
+                                       size=(pl,)).astype(np.int32)))
+    return reqs
+
+
+def _fleet(cfg, params, prefix_aware: bool) -> EngineFleet:
+    engines = []
+    for i in range(2):
+        ecfg = EngineConfig(max_slots=4, kv_pool_tokens=8192,
+                            max_prefill_tokens=512,
+                            chunk_prefill_tokens=256,   # same prefill mode
+                            enable_prefix_cache=prefix_aware,
+                            decode_steps_per_tick=4, engine_id=i)
+        engines.append(ServingEngine(cfg, params, FCFSScheduler(), ecfg))
+    cost = cost_model()
+    return EngineFleet(
+        engines, router=EWSJFRouter(cost=cost), cost=cost,
+        monitor=HealthMonitor(HealthConfig(check_interval=0.25)),
+        directory=(PrefixDirectory(PrefixDirectoryConfig(sync_interval=0.1))
+                   if prefix_aware else None),
+        topology=LinkTopology() if prefix_aware else None)
+
+
+def _ttft_pcts(fleet: EngineFleet) -> dict:
+    short = [r.ttft for r in fleet.finished()
+             if r.request_id < 1000 and r.ttft is not None]
+    if not short:
+        return {"n": 0, "p50": None, "p95": None}
+    return {"n": len(short),
+            "p50": float(np.percentile(short, 50)),
+            "p95": float(np.percentile(short, 95))}
+
+
+def run_mode(cfg, params, reqs, prefix_aware: bool) -> dict:
+    import copy
+    fleet = _fleet(cfg, params, prefix_aware)
+    res = fleet.serve(copy.deepcopy(reqs), max_ticks=20_000)
+    out = {"finished": res["finished"], "shed": res["shed"],
+           "elapsed_s": res["elapsed_s"],
+           "short_ttft": _ttft_pcts(fleet),
+           "prefix_saved_tokens": sum(
+               st["prefix_saved_tokens"] for st in res["engines"].values()),
+           "prefix_fetches": res["prefix_fetches"],
+           "prefix_fetch_bytes": res["prefix_fetch_bytes"]}
+    return out
+
+
+def main(quick: bool = False, json_path: str | None = None) -> dict:
+    cfg = get_smoke_config(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_shared, n_long = (10, 2) if quick else (24, 4)
+    reqs = _workload(cfg, n_shared, n_long)
+
+    report = {"bench": "engine_fleet", "arch": ARCH, "quick": quick,
+              "n_shared": n_shared, "n_long": n_long,
+              "shared_prefix_tokens": SHARED_LEN, "scenarios": {}}
+    for mode, aware in (("prefix_aware", True), ("prefix_blind", False)):
+        t0 = time.perf_counter()
+        rep = run_mode(cfg, params, reqs, aware)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        emit(f"fleet_{mode}_s{n_shared}_l{n_long}", wall_us,
+             f"finished={rep['finished']}|"
+             f"ttft_p95={rep['short_ttft']['p95']}|"
+             f"saved_tokens={rep['prefix_saved_tokens']}|"
+             f"fetches={rep['prefix_fetches']}")
+        report["scenarios"][mode] = rep
+
+    aware_p95 = report["scenarios"]["prefix_aware"]["short_ttft"]["p95"]
+    blind_p95 = report["scenarios"]["prefix_blind"]["short_ttft"]["p95"]
+    ok = (aware_p95 is not None and blind_p95 is not None
+          and aware_p95 <= blind_p95 * 1.05)
+    report["prefix_aware_not_worse"] = bool(ok)
+    report["reuse_happened"] = (
+        report["scenarios"]["prefix_aware"]["prefix_saved_tokens"] > 0)
+    emit("fleet_prefix_claim", 0.0,
+         f"aware_p95={aware_p95}|blind_p95={blind_p95}|not_worse={ok}|"
+         f"reuse={report['reuse_happened']}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (crash canary + artifact)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results JSON (e.g. BENCH_fleet.json)")
+    args = ap.parse_args()
+    main(quick=args.quick, json_path=args.json)

@@ -39,7 +39,7 @@ def main(argv=None) -> None:
         os.environ.setdefault("BENCH_SCALE", "0.01")
 
     from . import (bench_cluster_routing, bench_engine_convergence,
-                   bench_kernels, bench_meta_optimizer,
+                   bench_engine_fleet, bench_kernels, bench_meta_optimizer,
                    bench_padding, bench_policy_store, bench_predicted_length,
                    bench_prefix_cache, bench_role_autoscaler,
                    bench_scheduler_overhead, bench_table3_queue_count,
@@ -73,6 +73,9 @@ def main(argv=None) -> None:
          lambda: bench_predicted_length.main(quick=args.quick)),
         ("engine_convergence", "DES↔engine convergence (beyond-paper)",
          lambda: bench_engine_convergence.main(quick=args.quick)),
+        ("engine_fleet", "Live engine fleet: prefix-aware routing "
+         "(beyond-paper)",
+         lambda: bench_engine_fleet.main(quick=args.quick)),
         ("kernels", "Pallas kernels", bench_kernels.main),
     ]
     t0 = time.time()

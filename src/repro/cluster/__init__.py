@@ -62,4 +62,15 @@ __all__ = [
     "make_router",
     "ClusterSimulator", "ClusterSimResult", "ScenarioEvent",
     "run_router_comparison", "make_fleet",
+    "EngineFleet", "EngineReplica", "FleetStats",
 ]
+
+
+def __getattr__(name):
+    """Lazy attribute hook: ``engine_fleet`` pulls in ``serving.engine``
+    (JAX), so it is imported only on first access to keep the DES-only
+    import path light for simulator tests and tooling."""
+    if name in ("EngineFleet", "EngineReplica", "FleetStats"):
+        from . import engine_fleet
+        return getattr(engine_fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -395,6 +395,16 @@ class AdmissionController:
 
     # ---- re-admission queue ----------------------------------------------
 
+    def park(self, req: Request, now: float) -> bool:
+        """Park an orphaned in-flight request (engine failure / heartbeat
+        lapse) directly into the bounded re-admission queue — the fleet's
+        recovery path rides the same defer/retry pump as admission-time
+        deferrals.  Returns False (permanent shed, terminal stamped) when
+        the queue is full or the deadline cannot be made."""
+        slo = self.slo_of(req)
+        dec = self._reject(req, slo, now, 0.0, "orphaned")
+        return dec.reason == "defer"
+
     def retry_pending(self) -> int:
         """Number of deferred requests parked in the re-admission queue."""
         return len(self._retry_q)

@@ -152,8 +152,8 @@ class EWSJFRouter(Router):
         self.alignment_penalty = 0.25
         # replica_id -> (installed queue-bounds key, policy epoch, factor)
         self._align_memo: dict[int, tuple[tuple, int, float]] = {}
-        # replica_id -> (scheduler version, {queue_id: (work, capped_work)})
-        self._work_memo: dict[int, tuple[int, dict[int, tuple[float, float]]]] = {}
+        # replica_id -> ((sched version, cost rev), {queue_id: (work, capped)})
+        self._work_memo: dict[int, tuple[tuple, dict[int, tuple[float, float]]]] = {}
         # Observability handle (obs.Observability), wired by the cluster
         # simulator.  With obs on, ``select`` sets ``_stash_terms`` around
         # its min() scan so ``route_cost`` drops each candidate's term
@@ -220,6 +220,18 @@ class EWSJFRouter(Router):
                 self._route_cost_h.observe(terms[7])
         return best
 
+    # ---- per-replica cost models -----------------------------------------
+
+    def _replica_cost(self, replica) -> CostModel:
+        """Cost model pricing work on *this* replica: a live engine replica
+        whose calibrator converged exposes its own ``CalibratedCostModel``
+        fit via ``router_cost`` (``cluster.engine_fleet.EngineReplica``);
+        everything else — every DES ``ReplicaModel`` in particular, which
+        has no such attribute — uses the router's shared roofline, keeping
+        the legacy path bit-identical."""
+        rc = getattr(replica, "router_cost", None)
+        return self.cost if rc is None else rc
+
     # ---- KV plane (prefix reuse) ----------------------------------------
 
     def _prefix_active(self, replica: ReplicaModel, req) -> bool:
@@ -238,6 +250,7 @@ class EWSJFRouter(Router):
         L = int(req.prompt_len)
         hashes = req.prompt_hashes
         bs = replica.p.block_size
+        cost = self._replica_cost(replica)
         local = replica.prefix_probe(hashes)
         cached = min(local * bs, L - 1) if local else 0
         plan: Optional[PrefixFetch] = None
@@ -250,14 +263,14 @@ class EWSJFRouter(Router):
                     hashes, exclude=replica.replica_id)
                 if src >= 0 and blocks > local:
                     n_bytes = ((blocks - local) * bs
-                               * self.cost.model.kv_bytes_per_token)
+                               * cost.model.kv_bytes_per_token)
                     ex = (self.topology.exposed_time(n_bytes, src,
                                                      replica.replica_id)
                           if self.topology is not None
                           else n_bytes / ICI_BW)
                     remote_cached = min(blocks * bs, L - 1)
-                    saving = (self.cost.prefill_cost(L, cached)
-                              - self.cost.prefill_cost(L, remote_cached))
+                    saving = (cost.prefill_cost(L, cached)
+                              - cost.prefill_cost(L, remote_cached))
                     if saving > ex:
                         cached, plan, exposed = remote_cached, PrefixFetch(
                             src_replica=src, blocks=blocks,
@@ -278,19 +291,21 @@ class EWSJFRouter(Router):
                      snap) -> dict[int, tuple[float, float]]:
         """Per-queue (total FIFO work, lookahead-capped work) in prefill
         seconds.  Time-independent between scheduler mutations, so cacheable
-        keyed by the scheduler's published version."""
+        keyed by the scheduler's published version (+ the replica's cost
+        revision: a calibration refresh reprices cached works)."""
+        key = (replica.sched.version, getattr(replica, "cost_rev", 0))
         if self.use_cache:
             hit = self._work_memo.get(replica.replica_id)
-            if hit is not None and hit[0] == replica.sched.version:
+            if hit is not None and hit[0] == key:
                 return hit[1]
+        cost = self._replica_cost(replica)
         works = {}
         for q in snap.queues:
-            unit = self.cost.c_prefill(max(q.mean_len, 1.0))
+            unit = cost.c_prefill(max(q.mean_len, 1.0))
             works[q.queue_id] = (q.depth * unit,
                                  min(q.depth, self.contention_horizon) * unit)
         if self.use_cache:
-            self._work_memo[replica.replica_id] = (replica.sched.version,
-                                                   works)
+            self._work_memo[replica.replica_id] = (key, works)
         return works
 
     def _alignment_factor(self, replica: ReplicaModel, snap) -> float:
@@ -343,11 +358,12 @@ class EWSJFRouter(Router):
         prefill cost joins the comparison; with it off, the terms vanish
         and this is exactly the prefix-blind start-delay estimate."""
         L = float(req.prompt_len)
+        cost = self._replica_cost(replica)
         own = 0.0
         if self._prefix_active(replica, req):
             cached, _, exposed = self._prefix_terms(replica, req)
             L = max(L - cached, 1.0)
-            own = (self.cost.prefill_cost(float(req.prompt_len), cached)
+            own = (cost.prefill_cost(float(req.prompt_len), cached)
                    / max(replica.speed, 1e-6)) + exposed
         snap = replica.scheduler_snapshot(now, fresh=not self.use_cache)
         works = self._queue_works(replica, snap)
@@ -388,7 +404,7 @@ class EWSJFRouter(Router):
         if pstep is not None:
             decode_drag = replica.inflight() * pstep
         else:
-            decode_drag = replica.inflight() * self.cost.decode_step_time(
+            decode_drag = replica.inflight() * cost.decode_step_time(
                 max(replica.inflight(), 1),
                 max(replica.inflight(), 1) * max(L, 1.0))
 
@@ -398,7 +414,7 @@ class EWSJFRouter(Router):
         #     a pipeline that is not moving, so each parked handoff charges
         #     the decode admission *its own* KV context is waiting on.
         #     Empty outbox (the steady state, and every unified fleet) ⇒ 0.0.
-        stalled = sum(self.cost.decode_step_time(1, h.kv_tokens)
+        stalled = sum(cost.decode_step_time(1, h.kv_tokens)
                       for h in replica.outbox)
 
         delay = (ahead + contention) / max(replica.speed, 1e-6) + resid \

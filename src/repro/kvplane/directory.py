@@ -151,6 +151,15 @@ class PrefixDirectory:
                 best_rid, best_blocks = rid, blocks
         return best_rid, best_blocks
 
+    def advertised_replicas(self) -> set:
+        """Replica ids present in the merged view.  Conformance surface:
+        a forgotten or staled-out publisher must never appear here (the
+        router would plan fetches from a corpse)."""
+        out: set = set()
+        for holders in self._by_hash.values():
+            out.update(holders)
+        return out
+
     def stats(self) -> dict:
         """Directory telemetry: epoch, entry count, publish/merge totals."""
         return {"epoch": self.epoch, "entries": len(self._by_hash),

@@ -213,6 +213,11 @@ class ServingEngine:
         self.replica_key = replica_key
         self.shed: list[Request] = []
         self.readmitted = 0
+        # Fleet lifecycle flags (cluster.engine_fleet): an engine that
+        # failed is never ticked again; a draining one finishes in-flight
+        # slots but receives no new dispatches.
+        self.alive = True
+        self.draining = False
         self._prefill_tok_rate = 0.0     # EWMA tokens/s, for delay estimates
         self.finished: list[Request] = []
         self.tokens_out = 0              # every sampled token (heartbeats)
@@ -464,6 +469,129 @@ class ServingEngine:
                 continue
             self._decode_tick()
         return self.finished
+
+    def tick(self) -> None:
+        """One engine iteration — exactly the body of ``run``'s loop, for
+        external drivers (``cluster.engine_fleet.EngineFleet``) that own
+        arrival ingestion and interleave many engines on one clock.  A dead
+        engine never ticks; a draining one runs its in-flight slots dry but
+        admits nothing new (its queue was drained back to the router)."""
+        if not self.alive:
+            return
+        now = self.now()
+        self._pump_retries(now)
+        if hasattr(self.sched, "maybe_reoptimize"):
+            self.sched.maybe_reoptimize(now)
+        self._maybe_sync_policy(now)
+        if not self.draining:
+            self._admit(now)
+        self._prefill_chunk_tick(now)
+        self._decode_tick()
+        if self.draining and not self.has_work():
+            self.alive = False
+
+    def has_work(self) -> bool:
+        """Anything decoding, mid-prefill, or queued."""
+        return bool(self.slot_state or self._prefilling
+                    or self.sched.waiting())
+
+    # ---- fleet lifecycle (failure / drain) --------------------------------
+
+    def fail(self) -> list[Request]:
+        """Hard failure: every in-flight and queued request is orphaned and
+        returned for fleet-level re-routing (recompute recovery — the KV,
+        the radix cache, and the host block store die with the engine).
+        Mirrors ``ReplicaModel.fail`` so the cluster control plane treats
+        both backends identically."""
+        self.alive = False
+        orphans = [st.req for st in self._prefilling.values()]
+        orphans += [st.req for st in self.slot_state.values()]
+        orphans += self.sched.drain()
+        self._prefilling.clear()
+        self.slot_state.clear()
+        self.slots = SlotAllocator(self.e.max_slots)
+        self._slot_last_tok[:] = -1.0
+        self.pool = BlockPool(self.e.kv_pool_tokens // self.e.block_size,
+                              self.e.block_size)
+        self._node_kv.clear()
+        if self.radix is not None:
+            from ..kvplane.radix import RadixPrefixIndex
+            self.radix = RadixPrefixIndex(
+                self.pool, self.e.block_size,
+                capacity_blocks=self.e.prefix_cache_blocks)
+            self.radix.on_evict = self._on_radix_evict
+        for req in orphans:
+            req.state = RequestState.PREEMPTED
+            req.preemptions += 1
+            req.generated = 0
+            req.first_token_time = None
+            req.cached_len = 0          # its cached prefix is gone too
+            req.prefix_fetch = None
+            self.output_tokens.pop(req.request_id, None)
+        return orphans
+
+    def start_drain(self) -> list[Request]:
+        """Graceful drain: stop admitting, let slots finish (``tick`` flips
+        ``alive`` off once the last one does), give queued work back for
+        re-routing.  Pins unwind naturally as slots finish."""
+        self.draining = True
+        queued = self.sched.drain()
+        for req in queued:
+            req.state = RequestState.WAITING
+            req.cached_len = 0          # destination re-probes its own radix
+            req.prefix_fetch = None
+        if not self.has_work():
+            self.alive = False
+        return queued
+
+    # ---- host-KV handoff (fleet prefix plane) -----------------------------
+
+    def export_prefix_blocks(self, hashes, want: int) -> list[dict]:
+        """Source side of a fleet host-KV handoff: the host (numpy) KV
+        blocks of the longest locally cached prefix of ``hashes``, root
+        first, capped at ``want`` blocks and truncated at the first block
+        whose KV content is not host-resident (so the shipped set is always
+        a closed prefix an importer can attach)."""
+        if self.radix is None or not hashes or want <= 0:
+            return []
+        m = self.radix.match(hashes[:want], self.now())
+        path: list = []
+        node = m.node
+        while node is not None and node.depth > 0:
+            path.append(node)
+            node = node.parent
+        path.reverse()
+        out: list[dict] = []
+        for nd in path:
+            kv = self._node_kv.get(nd.node_id)
+            if kv is None:
+                break
+            out.append(kv)
+        return out
+
+    def import_prefix_blocks(self, hashes, blocks_kv: list[dict]) -> int:
+        """Destination side of a fleet host-KV handoff: insert the chain
+        into the local radix (allocating real pool blocks — the pool stays
+        the single accountant) and attach the shipped host KV to the newly
+        resident nodes.  Pool pressure may stop the insert early; only
+        blocks that actually landed count.  Returns blocks landed."""
+        if self.radix is None or not blocks_kv:
+            return 0
+        now = self.now()
+        node, _ = self.radix.insert(hashes[:len(blocks_kv)], now)
+        path: list = []
+        while node is not None and node.depth > 0:
+            path.append(node)
+            node = node.parent
+        path.reverse()
+        landed = 0
+        for i, nd in enumerate(path):
+            if i >= len(blocks_kv):
+                break
+            if nd.node_id not in self._node_kv:
+                self._node_kv[nd.node_id] = blocks_kv[i]
+            landed += 1
+        return landed
 
     def _maybe_sync_policy(self, now: float) -> None:
         """Strategic-plane round against a shared ``cluster.PolicyStore``

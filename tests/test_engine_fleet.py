@@ -1,0 +1,372 @@
+"""Fleet-conformance harness for ``cluster.engine_fleet`` — a seeded
+randomized driver over live tiny-config engines under fault / drain events,
+property-checking the invariants the fleet holds by construction:
+
+* no request lost or double-dispatched (terminal accounting is exact);
+* every pinned prefix path unpinned at terminal state;
+* per-engine ``BlockPool`` conservation across handoffs (at terminal, the
+  only allocations are radix cache blocks);
+* the directory never advertises a dead engine past one sync round;
+* the router never dispatches to a drained engine.
+
+``FLEET_SEED`` (env, default 0) reseeds the randomized driver — the
+``tools/check_seeds.py`` CI step reruns this module under several seeds to
+catch seed-dependent flake.  The 2-engine cases run in the fast lane; the
+3-engine fault-injection sweep is marked ``slow``.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (AdmissionController, EngineFleet, HealthConfig,
+                           HealthMonitor)
+from repro.configs import get_smoke_config
+from repro.core import FCFSScheduler, Request
+from repro.core.cost_model import CostModel
+from repro.kvplane import (LinkTopology, PrefixDirectory,
+                           PrefixDirectoryConfig)
+from repro.kvplane.topology import PrefixFetch
+from repro.models import init_params
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.replay import burst_trace
+
+FLEET_SEED = int(os.environ.get("FLEET_SEED", "0"))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("llama2-13b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, eid, kv_pool=4096):
+    e = EngineConfig(max_slots=4, kv_pool_tokens=kv_pool,
+                     max_prefill_tokens=256, chunk_prefill_tokens=128,
+                     enable_prefix_cache=True, decode_steps_per_tick=4,
+                     engine_id=eid)
+    return ServingEngine(cfg, params, FCFSScheduler(), e)
+
+
+def _fleet(cfg, params, n, admission=True, timeout=5.0):
+    engines = [_engine(cfg, params, i) for i in range(n)]
+    return EngineFleet(
+        engines,
+        monitor=HealthMonitor(HealthConfig(heartbeat_timeout=timeout)),
+        directory=PrefixDirectory(PrefixDirectoryConfig(sync_interval=0.0)),
+        topology=LinkTopology(),
+        admission=AdmissionController() if admission else None)
+
+
+def _trace(cfg, n, seed):
+    return burst_trace(n, seed=seed, vocab_size=cfg.vocab_size,
+                       short=(16, 48), long=(64, 96), long_frac=0.3,
+                       out_range=(4, 8))
+
+
+def _assert_terminal_invariants(fleet, submitted_ids,
+                                drain_marks=None) -> None:
+    """The property suite: run after the fleet has drained a trace."""
+    fin = fleet.finished()
+    shed = list(fleet.shed)
+    for rep in fleet.replicas:
+        shed.extend(rep.engine.shed)
+    ids = sorted([r.request_id for r in fin] + [r.request_id for r in shed])
+    # Conservation: every submitted request reaches exactly one terminal
+    # state on exactly one engine — nothing lost, nothing double-counted.
+    assert ids == sorted(submitted_ids), (ids, submitted_ids)
+
+    for rep in fleet.replicas:
+        e = rep.engine
+        # No in-flight residue on any engine, dead or alive.
+        assert not e.slot_state and not e._prefilling
+        if e.radix is not None:
+            e.radix.check_invariants()
+            # Every pinned prefix path was unpinned at terminal state.
+            assert all(nd.pins == 0 for nd in e.radix._nodes.values())
+            # BlockPool conservation across handoffs: the only allocations
+            # left are the radix cache's own (tuple-keyed) blocks —
+            # imported prefix blocks were paid for by the pool, finished
+            # sequences freed theirs.
+            want = {e.radix._alloc_key(nid) for nid in e.radix._nodes}
+            assert set(e.pool.allocs) == want
+
+    # The directory only advertises live, non-draining engines (forget is
+    # immediate on fail/drain; staleness ages out silent publishers).
+    for rid in fleet.directory.advertised_replicas():
+        rep = fleet._by_id[rid]
+        assert rep.alive and not rep.draining
+
+    # A drained engine took no dispatch after the drain point.
+    for eid, mark in (drain_marks or {}).items():
+        assert len(fleet._by_id[eid].engine.dispatch_log) == mark
+
+
+def _drive(fleet, reqs, rng, events=()):
+    """Manual fleet loop with event injection at randomized iterations.
+    ``events`` is a list of ("fail"|"drain", engine_id); each fires at a
+    random early iteration drawn from ``rng``."""
+    submitted = [r.request_id for r in reqs]
+    now = fleet.now()
+    for r in reqs:
+        fleet.submit(r, now)
+    schedule = {}
+    for kind, eid in events:
+        it = 1 + int(rng.integers(0, 10))
+        while it in schedule:
+            it += 1
+        schedule[it] = (kind, eid)
+    drain_marks = {}
+    for i in range(4000):
+        now = fleet.now()
+        done = (fleet._accounted() >= len(reqs) and not fleet.backlog
+                and (fleet.admission is None
+                     or not fleet.admission.retry_pending()))
+        # fire due events; a short burst may drain before a late slot, so
+        # any still-pending events fire before the loop is allowed to exit
+        due = sorted(k for k in schedule if k <= i or done)
+        for k in due:
+            kind, eid = schedule.pop(k)
+            if kind == "fail":
+                fleet.fail_engine(eid, now)
+            else:
+                fleet.drain_engine(eid, now)
+                drain_marks[eid] = len(
+                    fleet._by_id[eid].engine.dispatch_log)
+            # dead/draining engines leave the directory within the round
+            assert eid not in fleet.directory.advertised_replicas()
+        fleet._pump(now)
+        if fleet.backlog:
+            still = []
+            for req in fleet.backlog:
+                rep = fleet.router.select(fleet.replicas, req, now)
+                if rep is None:
+                    still.append(req)
+                else:
+                    rep.submit(req, now)
+            fleet.backlog = still
+        if rng.random() < 0.3:
+            fleet.prefix_sync(now)
+        if rng.random() < 0.3:
+            fleet.health_round(now)
+        fleet.step()
+        if (not schedule and fleet._accounted() >= len(reqs)
+                and not fleet.backlog
+                and (fleet.admission is None
+                     or not fleet.admission.retry_pending())):
+            break
+    return submitted, drain_marks
+
+
+# ---------------------------------------------------------------------------
+# fast lane: 2-engine tiny config
+# ---------------------------------------------------------------------------
+
+def test_fleet_serves_burst(model):
+    """Happy path: a burst over 2 engines drains through ``serve`` with
+    exact terminal accounting and all invariants clean."""
+    cfg, params = model
+    fleet = _fleet(cfg, params, 2, admission=False)
+    reqs = _trace(cfg, 10, seed=FLEET_SEED)
+    res = fleet.serve(reqs, max_ticks=4000)
+    assert res["finished"] + res["shed"] == 10
+    assert res["routed"] >= 10
+    # both engines participated (the router balances an empty fleet)
+    assert all(st["dispatched"] > 0 for st in res["engines"].values())
+    _assert_terminal_invariants(fleet, [r.request_id for r in reqs])
+
+
+def test_fleet_randomized_events(model):
+    """Seeded randomized driver: one mid-burst drain or failure of engine 0
+    at a random iteration; the survivors absorb the work and every
+    invariant holds at terminal state."""
+    cfg, params = model
+    rng = np.random.default_rng(FLEET_SEED)
+    kind = "fail" if rng.random() < 0.5 else "drain"
+    fleet = _fleet(cfg, params, 2)
+    reqs = _trace(cfg, 12, seed=FLEET_SEED + 1)
+    submitted, marks = _drive(fleet, reqs, rng, events=[(kind, 0)])
+    _assert_terminal_invariants(fleet, submitted, marks)
+    res = fleet.result()
+    assert res["finished"] + res["shed"] == len(submitted)
+    if kind == "fail":
+        assert res["failures"] == [0]
+    else:
+        assert res["drains"] == [0]
+
+
+def test_fleet_prefix_handoff_via_router(model):
+    """Directory-driven cross-engine reuse: engine 0 serves the shared
+    prefix and advertises it; a loaded engine 0 then steers the next
+    shared-prefix arrival to engine 1, whose routing plan fetches the
+    prefix remotely — real host-KV blocks land in engine 1's radix and the
+    attach skips the shared tokens.
+
+    The shared roofline prices tiny smoke-scale prompts as weight-streaming
+    bound (a 64-token saving is ~0s, so no fetch plan would ever beat the
+    link), so this test routes with a deliberately compute-bound cost model
+    — the same regime long prompts hit on the default roofline, scaled down
+    to prompts a 512-position smoke engine can actually run."""
+    cfg, params = model
+    engines = [_engine(cfg, params, i) for i in range(2)]
+    fleet = EngineFleet(
+        engines, cost=CostModel(n_chips=1, mfu=1e-4),
+        monitor=HealthMonitor(HealthConfig()),
+        directory=PrefixDirectory(PrefixDirectoryConfig(sync_interval=0.0)),
+        topology=LinkTopology())
+    e0, e1 = (rep.engine for rep in fleet.replicas)
+    shared = list(range(100, 164))                      # 4 full blocks
+
+    warm = Request(request_id=0, prompt_len=64, max_new_tokens=4,
+                   arrival_time=0.0)
+    warm.prompt_tokens = np.asarray(shared, dtype=np.int32)
+    fleet.submit(warm, fleet.now())
+    for _ in range(400):
+        fleet.step()
+        if len(e0.finished) + len(e1.finished) >= 1:
+            break
+    fleet.prefix_sync()
+    holder = fleet.directory.advertised_replicas()
+    assert holder, "warm engine advertised nothing"
+    src_id = next(iter(holder))
+
+    # Load the holder's queue so the router prices the other engine lower.
+    src = fleet._by_id[src_id]
+    dst = next(r for r in fleet.replicas if r.replica_id != src_id)
+    for i in range(6):
+        filler = Request(request_id=100 + i, prompt_len=96,
+                         max_new_tokens=8, arrival_time=0.0)
+        fleet._stamp(filler)
+        src.engine.sched.submit(filler, fleet.now())
+
+    probe_before = None
+    hot = Request(request_id=1, prompt_len=96, max_new_tokens=4,
+                  arrival_time=0.0)
+    hot.prompt_tokens = np.asarray(shared + list(range(200, 232)),
+                                   dtype=np.int32)
+    fleet._stamp(hot)
+    probe_before = dst.prefix_probe(hot.prompt_hashes)
+    picked = fleet.router.select(fleet.replicas, hot, fleet.now())
+    assert picked.replica_id == dst.replica_id
+    assert hot.prefix_fetch is not None
+    assert hot.prefix_fetch.src_replica == src_id
+    fleet._handoff(hot, dst, fleet.now())
+    assert dst.prefix_probe(hot.prompt_hashes) > probe_before
+    assert fleet.stats.prefix_fetches == 1
+    assert fleet.stats.prefix_fetch_blocks > 0
+    assert fleet.stats.prefix_fetch_bytes > 0          # real host bytes
+    assert fleet.topology.stats()["fetches"] == 1
+
+    dst.submit(hot, fleet.now())
+    for _ in range(600):
+        fleet.step()
+        if hot in dst.engine.finished:
+            break
+    assert hot in dst.engine.finished
+    assert hot.cached_len == 64                         # shared blocks reused
+    assert dst.engine.prefix_saved_tokens >= 64
+    for e in (e0, e1):
+        e.radix.check_invariants()
+    # the handoff-landed path is fully unpinned once ``hot`` finished
+    # (the filler requests are still mid-flight on the source, legitimately
+    # pinning their own paths there)
+    if not dst.engine.slot_state and not dst.engine._prefilling:
+        assert all(nd.pins == 0 for nd in dst.engine.radix._nodes.values())
+
+
+def test_heartbeat_lapse_excluded_within_one_round(model):
+    """Satellite regression: an engine whose heartbeat lapses mid-burst is
+    excluded from ``EWSJFRouter.select`` within one health round, and its
+    in-flight requests ride the admission defer/retry pump — never
+    dropped."""
+    cfg, params = model
+    fleet = _fleet(cfg, params, 2, timeout=0.5)
+    reqs = _trace(cfg, 8, seed=FLEET_SEED + 2)
+    now = fleet.now()
+    for r in reqs:
+        fleet.submit(r, now)
+    # a couple of ticks so engine 0 has real in-flight state to orphan
+    for _ in range(2):
+        fleet.step()
+    victim = fleet.replicas[0]
+    had_work = victim.engine.has_work()
+    fleet.suppress_heartbeat(0)
+    # One health round past the timeout: exclusion must be immediate.
+    lapse_now = fleet.now() + 1.0
+    failed = fleet.health_round(lapse_now)
+    assert failed == [0]
+    assert not victim.alive
+    assert not victim.accepts_prefill()
+    probe = Request(request_id=999, prompt_len=32, max_new_tokens=4,
+                    arrival_time=0.0)
+    fleet._stamp(probe)
+    picked = fleet.router.select(fleet.replicas, probe, lapse_now)
+    assert picked is None or picked.replica_id != 0
+    assert 0 not in fleet.directory.advertised_replicas()
+    if had_work:
+        assert fleet.stats.reenqueued > 0
+
+    # Drain to completion on the survivor: orphans are re-admitted through
+    # due_retries, not lost.
+    for _ in range(4000):
+        now = fleet.now()
+        fleet._pump(now)
+        if fleet.backlog:
+            still = []
+            for req in fleet.backlog:
+                rep = fleet.router.select(fleet.replicas, req, now)
+                if rep is None:
+                    still.append(req)
+                else:
+                    rep.submit(req, now)
+            fleet.backlog = still
+        fleet.step()
+        if (fleet._accounted() >= len(reqs) and not fleet.backlog
+                and not fleet.admission.retry_pending()):
+            break
+    _assert_terminal_invariants(fleet, [r.request_id for r in reqs])
+    assert len(fleet.replicas[1].engine.dispatch_log) > 0
+
+
+def test_degraded_handoff_is_harmless(model):
+    """A fetch plan whose source died between routing and dispatch degrades
+    to a local-only prefill: no crash, no phantom blocks, no bytes
+    charged."""
+    cfg, params = model
+    fleet = _fleet(cfg, params, 2, admission=False)
+    req = Request(request_id=5, prompt_len=64, max_new_tokens=4,
+                  arrival_time=0.0)
+    fleet._stamp(req)
+    req.prefix_fetch = PrefixFetch(src_replica=0, blocks=4)
+    fleet.fail_engine(0)
+    dst = fleet.replicas[1]
+    fleet._handoff(req, dst, fleet.now())
+    assert req.prefix_fetch is None
+    assert fleet.stats.prefix_fetches == 0
+    assert fleet.stats.prefix_fetch_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# slow lane: 3-engine fault injection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_three_engine_fault_injection(model):
+    """3 engines, a failure AND a drain injected at random points of the
+    same burst: the remaining engine finishes the work and the full
+    invariant suite holds."""
+    cfg, params = model
+    rng = np.random.default_rng(FLEET_SEED + 7)
+    fleet = _fleet(cfg, params, 3)
+    reqs = _trace(cfg, 16, seed=FLEET_SEED + 3)
+    submitted, marks = _drive(fleet, reqs, rng,
+                              events=[("fail", 0), ("drain", 1)])
+    _assert_terminal_invariants(fleet, submitted, marks)
+    res = fleet.result()
+    assert res["finished"] + res["shed"] == len(submitted)
+    assert res["failures"] == [0] and res["drains"] == [1]
+    # the survivor did real work
+    assert res["engines"][2]["dispatched"] > 0
